@@ -1,0 +1,77 @@
+"""Fig. 7 reproduction: area-normalized throughput (GOPS/mm^2) of OpenGeMM
+vs the Gemmini OS/WS cycle model, matrix sizes (8,8,8)..(128,128,128).
+
+Paper claims: 3.75x-16.40x vs Gemmini OS, 3.58x-15.66x vs WS; Gemmini avg
+temporal utilization ~6.25% on these sizes [32].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dataflow import GemmShape
+from repro.core.gemmini_model import GemminiConfig, GemminiModel
+from repro.core.simulator import OpenGeMMSimulator
+
+SIZES = [8, 16, 24, 32, 48, 64, 96, 128]
+OPENGEMM_AREA_MM2 = 0.62   # paper Table 3 (after P&R estimate)
+OPENGEMM_FREQ = 200e6
+
+
+def run():
+    sim = OpenGeMMSimulator()
+    os_model = GemminiModel(GemminiConfig(weight_stationary=False))
+    ws_model = GemminiModel(GemminiConfig(weight_stationary=True))
+    out = []
+    for s in SIZES:
+        g = GemmShape(s, s, s)
+        rep = sim.report([g] * 10)
+        og_gops_mm2 = rep.gops(OPENGEMM_FREQ) / OPENGEMM_AREA_MM2
+        r = {
+            "size": s,
+            "opengemm": og_gops_mm2,
+            "gemmini_os": os_model.gops_per_mm2(g),
+            "gemmini_ws": ws_model.gops_per_mm2(g),
+            "gemmini_os_tu": os_model.temporal_utilization(g),
+            "gemmini_ws_tu": ws_model.temporal_utilization(g),
+        }
+        r["speedup_os"] = r["opengemm"] / r["gemmini_os"]
+        r["speedup_ws"] = r["opengemm"] / r["gemmini_ws"]
+        out.append(r)
+    return out
+
+
+def summary():
+    rs = run()
+    so = [r["speedup_os"] for r in rs]
+    sw = [r["speedup_ws"] for r in rs]
+    tus = [r["gemmini_ws_tu"] for r in rs] + [r["gemmini_os_tu"] for r in rs]
+    return {
+        "speedup_os_min": min(so), "speedup_os_max": max(so),
+        "speedup_ws_min": min(sw), "speedup_ws_max": max(sw),
+        "gemmini_avg_tu": sum(tus) / len(tus),
+    }
+
+
+def rows():
+    s = summary()
+    return [
+        {"name": "fig7/speedup_os", "value": f"{s['speedup_os_min']:.2f}-{s['speedup_os_max']:.2f}",
+         "derived": "paper=3.75-16.40"},
+        {"name": "fig7/speedup_ws", "value": f"{s['speedup_ws_min']:.2f}-{s['speedup_ws_max']:.2f}",
+         "derived": "paper=3.58-15.66"},
+        {"name": "fig7/gemmini_avg_tu", "value": round(s["gemmini_avg_tu"], 4),
+         "derived": "paper~=0.0625"},
+    ]
+
+
+if __name__ == "__main__":
+    print(f"{'size':>5s} {'OpenGeMM':>10s} {'Gem-OS':>8s} {'Gem-WS':>8s} "
+          f"{'spd-OS':>7s} {'spd-WS':>7s}  (GOPS/mm^2)")
+    for r in run():
+        print(f"{r['size']:5d} {r['opengemm']:10.1f} {r['gemmini_os']:8.1f} "
+              f"{r['gemmini_ws']:8.1f} {r['speedup_os']:6.2f}x {r['speedup_ws']:6.2f}x")
+    s = summary()
+    print(f"\nspeedup ranges: OS {s['speedup_os_min']:.2f}-{s['speedup_os_max']:.2f}x "
+          f"(paper 3.75-16.40), WS {s['speedup_ws_min']:.2f}-{s['speedup_ws_max']:.2f}x "
+          f"(paper 3.58-15.66); gemmini avg TU {s['gemmini_avg_tu']*100:.1f}% (paper ~6.25%)")

@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: OpenGeMM Pallas kernel (interpret-mode
+correctness timing is meaningless on CPU, so we benchmark the XLA path and
+report the kernel's analytic VMEM/roofline characteristics per tile spec).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import GemmShape, arithmetic_intensity
+from repro.core.generator import OpenGeMMConfig
+from repro.kernels import ops
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    out = []
+    cfg = OpenGeMMConfig()
+    for mkn in [(512, 512, 512), (1024, 4096, 1024), (4096, 4096, 4096)]:
+        g = GemmShape(*mkn)
+        spec = cfg.tpu_kernel_spec(g)
+        a = jnp.zeros((g.M, g.K), jnp.bfloat16)
+        b = jnp.zeros((g.K, g.N), jnp.bfloat16)
+        f = jax.jit(lambda a, b: ops.gemm(a, b, backend="xla"))
+        dt = _time(f, a, b)
+        # analytic TPU roofline for this GeMM at the generated tile spec
+        t_c = g.flops / PEAK_FLOPS_BF16
+        t_m = g.operand_bytes(16, 16, 32) / HBM_BW
+        out.append({
+            "name": f"kernel/gemm_{mkn[0]}x{mkn[1]}x{mkn[2]}",
+            "value": round(dt * 1e6, 1),
+            "derived": (
+                f"tile=({spec.tm},{spec.tk},{spec.tn}),AI={arithmetic_intensity(g):.0f},"
+                f"tpu_roofline_us={max(t_c, t_m)*1e6:.1f}"
+            ),
+        })
+    return out
+
+
+def rows():
+    return run()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']:28s} {r['value']:>9} us/call  {r['derived']}")

@@ -1,0 +1,57 @@
+"""Aggregate dry-run JSON results into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(results_dir: str = RESULTS):
+    out = []
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def rows(results_dir: str = RESULTS):
+    out = []
+    for r in load(results_dir):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        out.append({
+            "name": name,
+            "value": round(float(r["mfu"]) * 100, 2),
+            "derived": (
+                f"bound={r['bound']},compute_ms={float(r['compute_s'])*1e3:.1f},"
+                f"mem_ms={float(r['memory_s'])*1e3:.1f},"
+                f"coll_ms={float(r['collective_s'])*1e3:.1f},"
+                f"useful={float(r['useful_flops_ratio']):.2f}"
+            ),
+        })
+    return out
+
+
+def markdown_table(results_dir: str = RESULTS) -> str:
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| bound | useful/HLO | MFU % |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(results_dir):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {float(r['compute_s'])*1e3:.1f} | {float(r['memory_s'])*1e3:.1f} "
+            f"| {float(r['collective_s'])*1e3:.1f} | {r['bound']} "
+            f"| {float(r['useful_flops_ratio']):.2f} "
+            f"| {float(r['mfu'])*100:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(markdown_table(sys.argv[1] if len(sys.argv) > 1 else RESULTS))

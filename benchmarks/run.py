@@ -1,0 +1,53 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract) — for
+reproduction benchmarks `value` is the reproduced metric and `derived`
+carries the paper's reference value.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import fig5_ablation, fig7_gemmini, kernel_bench, table2_dnn, table3_efficiency
+
+    modules = [
+        ("fig5", fig5_ablation),
+        ("table2", table2_dnn),
+        ("fig7", fig7_gemmini),
+        ("table3", table3_efficiency),
+        ("kernel", kernel_bench),
+    ]
+    print("name,value,derived")
+    ok = True
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.rows():
+                print(f"{row['name']},{row['value']},{row['derived']}")
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"{name}/ERROR,{e!r},", file=sys.stderr)
+        print(f"# {name}: {time.time()-t0:.1f}s", file=sys.stderr)
+
+    # roofline rows from any dry-run results present on disk
+    try:
+        import os
+        from benchmarks import roofline_table
+        for row in roofline_table.rows():
+            print(f"{row['name']},{row['value']},{row['derived']}")
+        opt = os.path.join(os.path.dirname(roofline_table.RESULTS), "dryrun_opt")
+        for row in roofline_table.rows(opt):
+            print(f"{row['name'].replace('roofline/', 'roofline-opt/')},"
+                  f"{row['value']},{row['derived']}")
+    except Exception:
+        pass
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving demo: prefill + continuous decode over request slots,
+for a dense LM and for the hybrid (Jamba-style) arch whose SSM layers give
+O(1)-state decode.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    print("== dense (gemma3 family) ==")
+    serve.main(["--arch", "gemma3-1b", "--requests", "4", "--gen-len", "12"])
+    print("== hybrid (jamba family: mamba + attention + MoE) ==")
+    serve.main(["--arch", "jamba-1.5-large-398b", "--requests", "2", "--gen-len", "8"])
+    print("== recurrent (xlstm family) ==")
+    serve.main(["--arch", "xlstm-1.3b", "--requests", "2", "--gen-len", "8"])

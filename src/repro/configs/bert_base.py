@@ -1,0 +1,19 @@
+"""BERT-base: the paper's Table-2 transformer benchmark (encoder-only).
+Modeled as a non-causal dense LM backbone for framework integration."""
+import dataclasses
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="bert-base", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=30522, head_dim=64,
+    mlp_variant="gelu", norm="ln",
+    group_size=2,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256, group_size=1, dtype="float32",
+    )

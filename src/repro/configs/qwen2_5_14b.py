@@ -1,0 +1,18 @@
+"""Qwen2.5-14B [dense]: GQA kv=8, QKV bias.  [hf:Qwen/Qwen2.5 family; hf]"""
+import dataclasses
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=13824, vocab=152064, head_dim=128,
+    qkv_bias=True, rope_theta=1e6,
+    group_size=4,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256, group_size=1, dtype="float32",
+    )

@@ -1,0 +1,40 @@
+"""OpenGeMM core: the paper's contribution as a composable library.
+
+  dataflow      - 6-loop GeMM dataflow, tiling math, utilization definitions
+  generator     - OpenGeMMConfig design-time parameterization (paper Table 1)
+  simulator     - cycle model of the platform + Fig. 5 ablation harness
+  workloads     - im2col GeMM extraction for the paper's four DNNs
+  gemmini_model - Gemmini baseline for the Fig. 7 comparison
+"""
+
+from repro.core.dataflow import (
+    Dataflow,
+    GemmShape,
+    SpatialUnrolling,
+    TemporalUnrolling,
+    aggregate_utilization,
+)
+from repro.core.generator import CASE_STUDY, OpenGeMMConfig, TpuGemmSpec
+from repro.core.simulator import (
+    OpenGeMMSimulator,
+    WorkloadReport,
+    ablation_architectures,
+    fig5_median_utilizations,
+    random_fig5_shapes,
+)
+
+__all__ = [
+    "Dataflow",
+    "GemmShape",
+    "SpatialUnrolling",
+    "TemporalUnrolling",
+    "aggregate_utilization",
+    "OpenGeMMConfig",
+    "TpuGemmSpec",
+    "CASE_STUDY",
+    "OpenGeMMSimulator",
+    "WorkloadReport",
+    "ablation_architectures",
+    "fig5_median_utilizations",
+    "random_fig5_shapes",
+]

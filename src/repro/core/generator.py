@@ -1,0 +1,203 @@
+"""OpenGeMM accelerator *generator*: design-time parameterization.
+
+The paper's Table 1 enumerates the design-time parameters of the Chisel
+generator.  `OpenGeMMConfig` mirrors them exactly, plus the three run-time
+utilization mechanisms as feature flags (for the ablation of Fig. 5).
+
+An `OpenGeMMConfig` can be turned into:
+  * a cycle-accurate simulator instance   -> core/simulator.py
+  * a TPU Pallas kernel specialization    -> kernels/gemm.py (via tpu_kernel_spec)
+
+This is the "hardware generator" re-instantiated in software: one config,
+many backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core.dataflow import (
+    Dataflow,
+    GemmShape,
+    SpatialUnrolling,
+    TemporalUnrolling,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenGeMMConfig:
+    """Design-time parameters (paper Table 1) + mechanism flags (Sec. 3)."""
+
+    # --- GeMM core ---------------------------------------------------------
+    Mu: int = 8            # rows of the DotProd mesh
+    Nu: int = 8            # columns of the DotProd mesh
+    Ku: int = 8            # lanes per DotProd unit
+    P_A: int = 8           # operand A precision (bits)
+    P_B: int = 8           # operand B precision (bits)
+    P_C: int = 32          # accumulator / result precision (bits)
+
+    # --- memory system -----------------------------------------------------
+    D_stream: int = 3      # pre-fetch / output buffer depth
+    R_mem: int = 16        # input memory ports
+    W_mem: int = 32        # output memory ports
+    P_word: int = 64       # memory port width (bits)
+    N_bank: int = 32       # scratchpad banks
+    D_mem: int = 1056      # bank depth (words)
+
+    # --- run-time mechanism flags (Fig. 5 ablation axes) --------------------
+    cfg_preload: bool = True       # CPL  (Sec. 3.2)
+    input_prefetch: bool = True    # pre-fetch + output buffering (Sec. 3.3)
+    strided_access: bool = True    # SMA  (Sec. 3.4)
+
+    # --- control-path model constants (calibrated, see EXPERIMENTS.md) ------
+    # The configuration routine on the Snitch host (computing loop bounds,
+    # addresses and strides, then writing the consolidated CSRs at
+    # 32 bits/cycle) -> modeled as csr_cycles per (re)configuration, plus a
+    # fixed launch handshake.  Calibrated against Fig. 5's median ratios.
+    csr_cycles: int = 2600
+    launch_cycles: int = 6
+    # Bank-conflict penalty multiplier on SPM accesses when the layout is NOT
+    # interleaved (no SMA): tiles mapping to the same bank serialize on a
+    # fraction of accesses.  Calibrated against Fig. 5.
+    bank_conflict_factor: float = 1.5
+    # SPM read pipeline latency (cycles); deeper pre-fetch buffers hide it.
+    spm_latency: int = 2
+
+    def __post_init__(self) -> None:
+        if min(self.Mu, self.Nu, self.Ku) < 1:
+            raise ValueError("array dims must be positive")
+        if self.D_stream < 1:
+            raise ValueError("D_stream must be >= 1")
+        for p in (self.P_A, self.P_B, self.P_C):
+            if p not in (2, 4, 8, 16, 32):
+                raise ValueError(f"unsupported precision {p}")
+
+    # -- derived hardware facts ----------------------------------------------
+
+    @property
+    def dataflow(self) -> Dataflow:
+        return Dataflow(
+            spatial=SpatialUnrolling(self.Mu, self.Ku, self.Nu),
+            temporal=TemporalUnrolling(),  # output stationary (Sec. 2.3)
+        )
+
+    @property
+    def peak_macs_per_cycle(self) -> int:
+        return self.Mu * self.Ku * self.Nu
+
+    def peak_gops(self, freq_hz: float = 200e6) -> float:
+        """Peak throughput; paper: 8x8x8 @ 200MHz = 204.8 GOPS."""
+        return 2 * self.peak_macs_per_cycle * freq_hz / 1e9
+
+    @property
+    def a_tile_bits(self) -> int:
+        return self.Mu * self.Ku * self.P_A
+
+    @property
+    def b_tile_bits(self) -> int:
+        return self.Ku * self.Nu * self.P_B
+
+    @property
+    def c_tile_bits(self) -> int:
+        return self.Mu * self.Nu * self.P_C
+
+    @property
+    def read_bw_bits(self) -> int:
+        """Input SPM bandwidth (bits / cycle)."""
+        return self.R_mem * self.P_word
+
+    @property
+    def write_bw_bits(self) -> int:
+        """Output SPM bandwidth (bits / cycle)."""
+        return self.W_mem * self.P_word
+
+    @property
+    def input_fetch_cycles(self) -> int:
+        """Cycles to fetch one A' + one B' tile at full input bandwidth."""
+        return max(1, -(-(self.a_tile_bits + self.b_tile_bits) // self.read_bw_bits))
+
+    @property
+    def output_write_cycles(self) -> int:
+        """Cycles to drain one C' tile at full output bandwidth."""
+        return max(1, -(-self.c_tile_bits // self.write_bw_bits))
+
+    @property
+    def spm_bytes(self) -> int:
+        """Scratchpad capacity; case-study config = 270 KiB."""
+        return self.N_bank * self.D_mem * self.P_word // 8
+
+    # -- ablation helpers ------------------------------------------------------
+
+    def with_mechanisms(
+        self, *, cpl: bool, prefetch: bool, sma: bool, depth: int | None = None
+    ) -> "OpenGeMMConfig":
+        return dataclasses.replace(
+            self,
+            cfg_preload=cpl,
+            input_prefetch=prefetch,
+            strided_access=sma,
+            D_stream=self.D_stream if depth is None else depth,
+        )
+
+    # -- TPU kernel specialization ---------------------------------------------
+
+    def tpu_kernel_spec(
+        self, shape: GemmShape | None = None, *, vmem_budget: int = 96 * 1024 * 1024
+    ) -> "TpuGemmSpec":
+        """Scale the (Mu,Ku,Nu) design point to MXU-native block sizes.
+
+        The paper's array is 8x8x8 because its SPM feeds 1024 b/cycle; the TPU
+        MXU wants (8,128)-aligned tiles and VMEM-resident working sets.  We
+        preserve the *ratios* of the design point but clamp each dim to
+        [128, 512] and to the problem size, keeping
+        A-tile + B-tile (double buffered) + C-accumulator within VMEM.
+        """
+        scale = 128 // min(self.Mu, self.Ku, self.Nu) if min(self.Mu, self.Ku, self.Nu) < 128 else 1
+        tm, tk, tn = self.Mu * scale, self.Ku * scale, self.Nu * scale
+        clamp = lambda v: max(128, min(512, v))
+        tm, tk, tn = clamp(tm), clamp(tk), clamp(tn)
+        if shape is not None:
+            align = lambda v, a: max(a, -(-v // a) * a)
+            tm = min(tm, align(shape.M, 8))
+            tk = min(tk, align(shape.K, 128))
+            tn = min(tn, align(shape.N, 128))
+        # shrink TK first (streamed most often) until double-buffered footprint fits
+        bytes_in = lambda: 2 * (tm * tk + tk * tn) * max(self.P_A, self.P_B) // 8
+        acc_bytes = lambda: tm * tn * 4
+        while bytes_in() + acc_bytes() > vmem_budget and tk > 128:
+            tk //= 2
+        while bytes_in() + acc_bytes() > vmem_budget and tn > 128:
+            tn //= 2
+        return TpuGemmSpec(
+            tm=tm, tk=tk, tn=tn, depth=self.D_stream,
+            int8=(self.P_A == 8 and self.P_B == 8 and self.P_C == 32),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuGemmSpec:
+    """Pallas specialization of a design point: BlockSpec tile sizes."""
+
+    tm: int
+    tk: int
+    tn: int
+    depth: int = 2          # pipeline buffer depth (D_stream analogue)
+    int8: bool = True
+
+    def __post_init__(self) -> None:
+        # MXU alignment: lanes = 128, sublanes = 8.
+        if self.tn % 128 or self.tk % 128:
+            raise ValueError(f"tk/tn must be multiples of 128: {self}")
+        if self.tm % 8:
+            raise ValueError(f"tm must be a multiple of 8: {self}")
+
+    @property
+    def grid_for(self):
+        def grid(shape: GemmShape) -> Tuple[int, int, int]:
+            return (-(-shape.M // self.tm), -(-shape.N // self.tn), -(-shape.K // self.tk))
+        return grid
+
+
+# The paper's case-study instance (Table 1, "Case study values").
+CASE_STUDY = OpenGeMMConfig()

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, Prefetcher
+
+__all__ = ["SyntheticLMData", "Prefetcher"]

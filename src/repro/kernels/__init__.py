@@ -1,0 +1,26 @@
+"""TPU hot-spot kernels for the OpenGeMM framework.
+
+  gemm            output-stationary tiled GeMM (the paper's core, on MXU)
+  gemm_pipelined  explicit depth-D ring-buffer variant (D_stream knob)
+  quant           int8 row quantization
+  ops             jit'd public wrappers + backend dispatch
+  ref             pure-jnp oracles
+"""
+
+from repro.kernels.ops import (
+    gemm,
+    gemm_int8_dequant,
+    linear,
+    quantize,
+    set_default_backend,
+    get_default_backend,
+)
+
+__all__ = [
+    "gemm",
+    "gemm_int8_dequant",
+    "linear",
+    "quantize",
+    "set_default_backend",
+    "get_default_backend",
+]

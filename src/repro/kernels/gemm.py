@@ -1,0 +1,147 @@
+"""OpenGeMM Pallas kernel: output-stationary tiled GeMM for TPU.
+
+TPU-native re-instantiation of the paper's GeMM core (Sec. 2):
+
+  * the (Mu, Ku, Nu) 3D MAC array becomes an MXU-aligned (TM, TK, TN)
+    BlockSpec tile — the *generator* (`make_gemm`) specializes the kernel per
+    `TpuGemmSpec`, exactly as the Chisel generator elaborates per config;
+  * the output-stationary dataflow (paper Sec. 2.3) becomes a float32/int32
+    accumulator held in VMEM scratch across the innermost K grid dimension —
+    partial sums never travel to HBM, only the (narrow) A/B operands stream;
+  * input pre-fetch / output buffering (paper Sec. 3.3) is provided by
+    Pallas' grid pipelining, which double-buffers the A/B blocks
+    (HBM->VMEM DMA for block i+1 overlaps compute on block i).  The
+    configurable-depth variant lives in gemm_pipelined.py.
+
+Grid layout: (M/TM, N/TN, K/TK) with K innermost ("arbitrary" semantics on
+the K axis because of the accumulator carry; M and N are parallel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.generator import TpuGemmSpec
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, out_dtype):
+    """One (TM, TN) output tile; accumulates over the K grid dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    # int8 x int8 -> int32 on the MXU; float paths accumulate in f32.
+    acc_ref[...] += jax.lax.dot(
+        a, b, preferred_element_type=acc_ref.dtype,
+        precision=jax.lax.Precision.DEFAULT,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _dequant_gemm_kernel(
+    a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *, k_steps: int, out_dtype
+):
+    """int8 GeMM with fused per-row/per-column scale dequant on write-back."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        scaled = acc_ref[...].astype(jnp.float32) * sa_ref[...] * sb_ref[...]
+        o_ref[...] = scaled.astype(out_dtype)
+
+
+def make_gemm(spec: TpuGemmSpec, *, interpret: bool = False) -> Callable:
+    """Generate a GeMM for one design point (the TPU 'hardware generator').
+
+    Returns gemm(a, b) for a:(M, K), b:(K, N) with M % TM == K % TK ==
+    N % TN == 0 (ops.py pads ragged problems — the TPU analogue of the
+    paper's spatial-utilization padding).
+    """
+
+    def gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+        M, K = a.shape
+        K2, N = b.shape
+        assert K == K2, (a.shape, b.shape)
+        assert M % spec.tm == 0 and K % spec.tk == 0 and N % spec.tn == 0, (
+            f"unpadded problem ({M},{K},{N}) for tile ({spec.tm},{spec.tk},{spec.tn})"
+        )
+        int_path = a.dtype == jnp.int8 and b.dtype == jnp.int8
+        acc_dtype = jnp.int32 if int_path else jnp.float32
+        out_dtype = jnp.int32 if int_path else acc_dtype
+        k_steps = K // spec.tk
+        grid = (M // spec.tm, N // spec.tn, k_steps)
+
+        kernel = functools.partial(
+            _gemm_kernel, k_steps=k_steps, out_dtype=out_dtype
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((spec.tm, spec.tk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((spec.tk, spec.tn), lambda i, j, k: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((spec.tm, spec.tn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+            scratch_shapes=[pltpu.VMEM((spec.tm, spec.tn), acc_dtype)],
+            interpret=interpret,
+        )(a, b)
+
+    return gemm
+
+
+def make_dequant_gemm(spec: TpuGemmSpec, *, interpret: bool = False) -> Callable:
+    """int8 GeMM with fused dequant epilogue: C_f32 = (A@B) * sa * sb.
+
+    sa: (M, 1) float32 row scales, sb: (1, N) float32 column scales — the
+    paper's P_C=32 write-back path extended with the int8 deployment scales.
+    """
+
+    def gemm(a, b, sa, sb):
+        M, K = a.shape
+        _, N = b.shape
+        assert M % spec.tm == 0 and K % spec.tk == 0 and N % spec.tn == 0
+        assert sa.shape == (M, 1) and sb.shape == (1, N), (sa.shape, sb.shape)
+        k_steps = K // spec.tk
+        grid = (M // spec.tm, N // spec.tn, k_steps)
+
+        kernel = functools.partial(
+            _dequant_gemm_kernel, k_steps=k_steps, out_dtype=jnp.float32
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((spec.tm, spec.tk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((spec.tk, spec.tn), lambda i, j, k: (k, j)),
+                pl.BlockSpec((spec.tm, 1), lambda i, j, k: (i, 0)),
+                pl.BlockSpec((1, spec.tn), lambda i, j, k: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((spec.tm, spec.tn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((spec.tm, spec.tn), jnp.int32)],
+            interpret=interpret,
+        )(a, b, sa, sb)
+
+    return gemm

@@ -1,0 +1,155 @@
+"""Public GeMM ops: jit'd wrappers with padding, backend dispatch and the
+int8 OpenGeMM deployment path.
+
+Every dense matmul in repro.models routes through `gemm`/`linear`, so the
+paper's technique is a first-class feature of the framework, not a demo:
+
+  backend="pallas"     TPU kernel (gemm.py) — production path
+  backend="pipelined"  TPU kernel with explicit depth-D ring buffer
+  backend="interpret"  Pallas interpret mode — CPU-correctness path (tests)
+  backend="xla"        jnp.einsum — dry-run / baseline path
+  backend="auto"       pallas on TPU, xla elsewhere
+
+Ragged problems are padded to the tile grid, the TPU analogue of the paper's
+spatial-utilization padding: the padding fraction *is* (1 - SU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import GemmShape
+from repro.core.generator import CASE_STUDY, OpenGeMMConfig, TpuGemmSpec
+from repro.kernels import ref
+from repro.kernels.gemm import make_dequant_gemm, make_gemm
+from repro.kernels.gemm_pipelined import make_pipelined_gemm
+
+_DEFAULT_BACKEND = "auto"
+
+
+def set_default_backend(backend: str) -> None:
+    """Process-wide default ('auto'|'pallas'|'pipelined'|'interpret'|'xla')."""
+    global _DEFAULT_BACKEND
+    if backend not in ("auto", "pallas", "pipelined", "interpret", "xla"):
+        raise ValueError(backend)
+    _DEFAULT_BACKEND = backend
+
+
+def get_default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def _resolve(backend: Optional[str]) -> str:
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
+    pm, pn = (-x.shape[0]) % m, (-x.shape[1]) % n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    spec: Optional[TpuGemmSpec] = None,
+    config: Optional[OpenGeMMConfig] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """C = A @ B through the OpenGeMM kernel generator.
+
+    a: (M, K), b: (K, N).  int8 inputs accumulate to int32, floats to f32.
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.gemm_ref(a, b)
+    M, K = a.shape
+    _, N = b.shape
+    cfg = config or CASE_STUDY
+    spec = spec or cfg.tpu_kernel_spec(GemmShape(M, K, N))
+    ap, bp = _pad2(a, spec.tm, spec.tk), _pad2(b, spec.tk, spec.tn)
+    interpret = backend == "interpret"
+    if backend == "pipelined":
+        k = make_pipelined_gemm(spec, interpret=interpret)
+    else:
+        k = make_gemm(spec, interpret=interpret)
+    out = k(ap, bp)
+    return out[:M, :N]
+
+
+def gemm_int8_dequant(
+    a_q: jax.Array,
+    b_q: jax.Array,
+    scale_a: jax.Array,
+    scale_b: jax.Array,
+    *,
+    spec: Optional[TpuGemmSpec] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """(A_q @ B_q) * sa * sb -> float32, fused in the kernel epilogue."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.gemm_dequant_ref(a_q, b_q, scale_a, scale_b)
+    M, K = a_q.shape
+    _, N = b_q.shape
+    spec = spec or CASE_STUDY.tpu_kernel_spec(GemmShape(M, K, N))
+    ap, bp = _pad2(a_q, spec.tm, spec.tk), _pad2(b_q, spec.tk, spec.tn)
+    sa = _pad2(scale_a, spec.tm, 1)
+    sb = _pad2(scale_b, 1, spec.tn)
+    k = make_dequant_gemm(spec, interpret=(backend == "interpret"))
+    return k(ap, bp, sa, sb)[:M, :N]
+
+
+def quantize(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel int8 quantization (jnp; kernels/quant.py for TPU)."""
+    return ref.quantize_ref(x, axis=axis)
+
+
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    quant: Optional[str] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """y = x @ w for arbitrary-rank x (..., K) and w (K, N).
+
+    quant="int8" runs the OpenGeMM int8 deployment path: activations are
+    row-quantized on the fly, weights column-quantized, and the kernel
+    dequantizes on write-back.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    resolved = _resolve(backend)
+    if quant in (None, "none") and resolved == "xla":
+        # Keep the leading dims intact: flattening (B, S, d) -> (B*S, d)
+        # merges differently-sharded axes and forces GSPMD to materialize
+        # the full tensor (measured 16x redundant projection compute on the
+        # 256-chip mesh — see EXPERIMENTS.md §Perf iteration 3).
+        # Output directly in the model dtype (the MXU accumulates in f32
+        # internally regardless); avoids materializing an f32 copy of every
+        # projection output.
+        return jnp.einsum(
+            "...k,kn->...n", x, w.astype(x.dtype),
+            preferred_element_type=x.dtype,
+        )
+    x2 = x.reshape(-1, K)
+    if quant == "int8":
+        xq, sx = quantize(x2, axis=-1)
+        wq, sw = quantize(w, axis=0)
+        out = gemm_int8_dequant(xq, wq, sx, sw.reshape(1, -1), backend=backend)
+        out = out.astype(x.dtype)
+    elif quant in (None, "none"):
+        out = gemm(x2, w.astype(x2.dtype), backend=backend).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown quant mode {quant!r}")
+    return out.reshape(*lead, w.shape[-1])

@@ -1,0 +1,46 @@
+"""Symmetric int8 quantization kernels (the OpenGeMM deployment precision).
+
+Per-row absmax quantization: x (M, K) float -> (q int8, scale f32 (M, 1)).
+Tiled over M so arbitrarily tall activations stream through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_rows(
+    x: jax.Array, *, block_m: int = 256, interpret: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 quantization; rows must divide into block_m."""
+    M, K = x.shape
+    bm = min(block_m, M)
+    assert M % bm == 0, (M, bm)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s

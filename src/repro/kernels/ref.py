@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every kernel in repro.kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(tests/test_kernels.py sweeps shapes and dtypes with assert_allclose).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with the OpenGeMM accumulation rule:
+
+    int8 x int8 accumulates in int32 (paper P_A=P_B=8, P_C=32); float paths
+    keep their input dtype on the MXU and accumulate in float32 (never
+    upcast the operands — bf16 x bf16 -> f32 is the native mode and half the
+    operand traffic).
+    """
+    if a.dtype == jnp.int8 and b.dtype == jnp.int8:
+        return jax.lax.dot(a, b, preferred_element_type=jnp.int32)
+    if a.dtype != b.dtype:
+        b = b.astype(a.dtype)
+    return jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def gemm_dequant_ref(
+    a: jax.Array, b: jax.Array, scale_a: jax.Array, scale_b: jax.Array
+) -> jax.Array:
+    """int8 GeMM with fused per-tensor/per-channel dequantization.
+
+    scale_a: scalar or (M, 1) row scales; scale_b: scalar or (1, N) column
+    scales.  Output float32 = (A @ B) * scale_a * scale_b.
+    """
+    acc = jax.lax.dot(a, b, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * scale_a * scale_b
+
+
+def quantize_ref(x: jax.Array, axis: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel int8 quantization along `axis`.
+
+    Returns (q, scale) with x ~= q * scale; scale shaped like x with `axis`
+    reduced to 1.
+    """
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def gemm_bias_act_ref(
+    a: jax.Array, b: jax.Array, bias: jax.Array | None = None, act: str = "none"
+) -> jax.Array:
+    """GeMM with fused bias-add and activation epilogue (float path)."""
+    c = gemm_ref(a, b)
+    if bias is not None:
+        c = c + bias
+    if act == "relu":
+        c = jnp.maximum(c, 0)
+    elif act == "gelu":
+        c = jax.nn.gelu(c)
+    elif act == "silu":
+        c = jax.nn.silu(c)
+    elif act != "none":
+        raise ValueError(f"unknown act {act!r}")
+    return c

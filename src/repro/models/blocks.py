@@ -1,0 +1,171 @@
+"""Transformer/hybrid blocks: one mixer (attention | mamba | mLSTM | sLSTM)
+plus its FFN/MoE, with pre- (and optionally post-) norms.
+
+Blocks are grouped into `cfg.group_size`-layer groups whose parameters are
+stacked along a leading axis and executed under `jax.lax.scan` (model.py) —
+compile time stays O(group) instead of O(layers), which is what makes the
+35-72 layer production configs lowerable in minutes on the CPU dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers, moe as moe_lib, ssm
+
+
+def _init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "ln":
+        return layers.init_layernorm(d, cfg.jax_dtype)
+    return layers.init_rmsnorm(d, cfg.jax_dtype)
+
+
+def _norm(x, p, cfg):
+    if cfg.norm == "ln":
+        return layers.layer_norm(x, p, cfg.norm_eps)
+    return layers.rms_norm(x, p, cfg.norm_eps)
+
+
+def _layer_uses_moe(cfg, layer_idx: int) -> bool:
+    return cfg.moe is not None and (layer_idx + 1) % cfg.moe_every == 0
+
+
+def init_block(key, cfg, kind: str, *, layer_idx: int = 0,
+               cross_attention: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": _init_norm(cfg)}
+    if kind in ("attn", "attn_local"):
+        p["mixer"] = attn_lib.init_attention(ks[0], cfg)
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["mixer"] = ssm.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross_attention:
+        p["norm_cross"] = _init_norm(cfg)
+        p["cross"] = attn_lib.init_attention(ks[1], cfg, cross=True)
+    # xLSTM blocks carry their own FFN (d_ff == 0); others get MLP or MoE.
+    if kind in ("attn", "attn_local", "mamba") and (cfg.d_ff or cfg.moe):
+        p["norm2"] = _init_norm(cfg)
+        if _layer_uses_moe(cfg, layer_idx):
+            p["ffn"] = moe_lib.init_moe(ks[2], cfg)
+        else:
+            p["ffn"] = layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_variant, cfg.jax_dtype)
+    if cfg.post_block_norm:
+        p["post_norm1"] = _init_norm(cfg)
+        if "ffn" in p:
+            p["post_norm2"] = _init_norm(cfg)
+    return p
+
+
+def apply_block(
+    x: jax.Array,
+    p,
+    cfg,
+    kind: str,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    prefix_len: int = 0,
+    cache: Optional[Any] = None,
+    cache_index: Optional[jax.Array] = None,
+    encoder_out: Optional[jax.Array] = None,
+    cross_cache: Optional[attn_lib.KVCache] = None,
+) -> Tuple[jax.Array, Any]:
+    """Returns (x, new_mixer_cache).  cache is the mixer state (KV / SSM)."""
+    h = _norm(x, p["norm1"], cfg)
+    if kind in ("attn", "attn_local"):
+        window = cfg.local_window if kind == "attn_local" else None
+        h, new_cache = attn_lib.attention(
+            h, p["mixer"], cfg, positions=positions, causal=causal,
+            window=window, prefix_len=prefix_len, cache=cache,
+            cache_index=cache_index,
+        )
+    elif kind == "mamba":
+        h, new_cache = ssm.mamba_block(h, p["mixer"], cfg, state=cache)
+    elif kind == "mlstm":
+        h, new_cache = ssm.mlstm_block(h, p["mixer"], cfg, state=cache)
+    elif kind == "slstm":
+        h, new_cache = ssm.slstm_block(h, p["mixer"], cfg, state=cache)
+    else:
+        raise ValueError(kind)
+    if cfg.post_block_norm:
+        h = _norm(h, p["post_norm1"], cfg)
+    x = x + h
+
+    if "cross" in p:
+        h = _norm(x, p["norm_cross"], cfg)
+        h, _ = attn_lib.attention(
+            h, p["cross"], cfg, positions=positions, causal=False,
+            kv_src=encoder_out if cross_cache is None else h,  # decode: cache
+            cache=cross_cache, cache_index=None,
+        )
+        x = x + h
+
+    if "ffn" in p:
+        h = _norm(x, p["norm2"], cfg)
+        if "router" in p["ffn"]:
+            h = moe_lib.moe_block(h, p["ffn"], cfg)
+        else:
+            h = layers.mlp(h, p["ffn"], cfg.mlp_variant)
+        if cfg.post_block_norm:
+            h = _norm(h, p["post_norm2"], cfg)
+        x = x + h
+    return x, new_cache
+
+
+def init_group(key, cfg, *, cross_attention: bool = False):
+    """Parameters for one scanned group: dict sub0..sub{G-1}."""
+    kinds = cfg.layer_kinds()
+    ks = jax.random.split(key, len(kinds))
+    return {
+        f"sub{i}": init_block(
+            ks[i], cfg, kind, layer_idx=i, cross_attention=cross_attention
+        )
+        for i, kind in enumerate(kinds)
+    }
+
+
+def apply_group(
+    x, gp, cfg, *, positions, causal=True, prefix_len=0,
+    caches=None, cache_index=None, encoder_out=None, cross_caches=None,
+):
+    """Apply one group of cfg.group_size blocks; returns (x, new_caches)."""
+    kinds = cfg.layer_kinds()
+    new_caches = []
+    for i, kind in enumerate(kinds):
+        x, nc = apply_block(
+            x, gp[f"sub{i}"], cfg, kind,
+            positions=positions, causal=causal, prefix_len=prefix_len,
+            cache=None if caches is None else caches[i],
+            cache_index=cache_index,
+            encoder_out=encoder_out,
+            cross_cache=None if cross_caches is None else cross_caches[i],
+        )
+        new_caches.append(nc)
+    return x, tuple(new_caches)
+
+
+def init_cache_for_kind(cfg, kind: str, batch: int, max_seq: int):
+    """Decode-state template for one block of the given kind."""
+    if kind in ("attn", "attn_local"):
+        hd = cfg.resolved_head_dim
+        shape = (batch, max_seq, cfg.n_kv_heads, hd)
+        return attn_lib.KVCache(
+            k=jnp.zeros(shape, cfg.jax_dtype), v=jnp.zeros(shape, cfg.jax_dtype)
+        )
+    if kind == "mamba":
+        return ssm.init_mamba_state(cfg, batch)
+    if kind == "mlstm":
+        return ssm.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return ssm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)

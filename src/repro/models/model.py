@@ -1,0 +1,319 @@
+"""Model assembly: decoder LMs, hybrid/SSM LMs, encoder-decoder (whisper),
+and prefix-LM VLM (paligemma), with scan-over-groups execution, KV/SSM decode
+caches and the training loss.
+
+Public API:
+  init_model(key, cfg)                         -> params
+  forward(params, cfg, batch)                  -> logits        (train/prefill)
+  loss_fn(params, cfg, batch)                  -> scalar loss
+  init_decode_state(params, cfg, batch, seq)   -> DecodeState
+  decode_step(params, cfg, state, tokens)      -> (logits, DecodeState)
+
+`batch` dict keys: "tokens" (B, S) int32 always; "frames" (B, S_enc, d) for
+encdec (audio frontend stub); "patches" (B, P, d_vision) for vlm.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import blocks, layers
+from repro.models.config import ArchConfig
+from repro.parallel.logical import shard
+
+VISION_DIM = 1152  # SigLIP-so400m width (paligemma stub frontend)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    dt = cfg.jax_dtype
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(ks[0], cfg.vocab, cfg.d_model, dt),
+        "final_norm": blocks._init_norm(cfg),
+    }
+    gkeys = jax.random.split(ks[1], cfg.n_groups)
+    cross = cfg.family == "encdec"
+    params["blocks"] = jax.vmap(
+        lambda k: blocks.init_group(k, cfg, cross_attention=cross)
+    )(gkeys)
+    if not cfg.tie_embeddings:
+        params["head"] = layers._init_dense(ks[2], cfg.d_model, cfg.vocab, dt)
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(ks[3], cfg.encoder_layers)
+        enc_cfg = cfg  # same width; encoder blocks are non-causal, no cross
+        params["encoder_blocks"] = jax.vmap(
+            lambda k: blocks.init_block(k, enc_cfg, "attn")
+        )(ekeys)
+        params["encoder_norm"] = blocks._init_norm(cfg)
+    if cfg.family == "vlm":
+        params["projector"] = layers._init_dense(ks[4], VISION_DIM, cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_groups(x, gparams, cfg, *, positions, causal=True, prefix_len=0,
+                encoder_out=None):
+    def body(h, gp):
+        h, _ = blocks.apply_group(
+            h, gp, cfg, positions=positions, causal=causal,
+            prefix_len=prefix_len, encoder_out=encoder_out,
+        )
+        return h, None
+
+    if cfg.remat:
+        # Activation checkpointing at group granularity: backward recomputes
+        # inside a group, activation memory stays O(n_groups * group I/O).
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, gparams)
+    return x
+
+
+def _run_encoder(frames, params, cfg):
+    """Whisper encoder over stubbed conv-frontend frame embeddings."""
+    x = frames.astype(cfg.jax_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, bp):
+        h, _ = blocks.apply_block(h, bp, cfg, "attn", positions=positions, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder_blocks"])
+    return blocks._norm(x, params["encoder_norm"], cfg)
+
+
+def forward(
+    params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+    last_only: bool = False,
+) -> jax.Array:
+    """Logits for the whole sequence, or only the final position when
+    `last_only` (serving prefill: the (B, S, vocab) tensor at 32k x 262k
+    vocab is ~TBs and is never needed — only the next-token logits are)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = layers.embed(tokens, params["embed"])
+    if cfg.tie_embeddings:
+        # Gemma-style embedding scaling balances tied input/output tables.
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    prefix_len = 0
+    encoder_out = None
+    positions = jnp.arange(S)
+
+    if cfg.family == "vlm":
+        prefix = layers.dense(batch["patches"].astype(cfg.jax_dtype), params["projector"])
+        x = jnp.concatenate([prefix, x], axis=1)
+        prefix_len = prefix.shape[1]
+        positions = jnp.arange(x.shape[1])
+    elif cfg.family == "encdec":
+        encoder_out = _run_encoder(batch["frames"], params, cfg)
+
+    x = shard(x, "batch", "seq", "embed")
+    x = _run_groups(
+        x, params["blocks"], cfg, positions=positions,
+        prefix_len=prefix_len, encoder_out=encoder_out,
+    )
+    x = blocks._norm(x, params["final_norm"], cfg)
+    if cfg.family == "vlm":
+        x = x[:, prefix_len:]
+    if last_only:
+        x = x[:, -1:]
+    logits = _unembed(x, params, cfg)
+    return logits
+
+
+def _unembed(x, params, cfg):
+    if cfg.tie_embeddings:
+        logits = layers.unembed(x, params["embed"])
+    else:
+        logits = layers.dense(x, params["head"])
+        logits = shard(logits, "batch", "seq", "vocab")
+    return logits
+
+
+def trunk(params, cfg: ArchConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Final hidden states (B, S, d) before the unembedding."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = layers.embed(tokens, params["embed"])
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    prefix_len = 0
+    encoder_out = None
+    positions = jnp.arange(S)
+    if cfg.family == "vlm":
+        prefix = layers.dense(batch["patches"].astype(cfg.jax_dtype), params["projector"])
+        x = jnp.concatenate([prefix, x], axis=1)
+        prefix_len = prefix.shape[1]
+        positions = jnp.arange(x.shape[1])
+    elif cfg.family == "encdec":
+        encoder_out = _run_encoder(batch["frames"], params, cfg)
+    x = shard(x, "batch", "seq", "embed")
+    x = _run_groups(
+        x, params["blocks"], cfg, positions=positions,
+        prefix_len=prefix_len, encoder_out=encoder_out,
+    )
+    x = blocks._norm(x, params["final_norm"], cfg)
+    if cfg.family == "vlm":
+        x = x[:, prefix_len:]
+    return x
+
+
+def loss_fn(
+    params, cfg: ArchConfig, batch: Dict[str, jax.Array], *, chunk: int = 512,
+) -> jax.Array:
+    """Next-token cross-entropy, computed over sequence chunks.
+
+    The (B, S, vocab) f32 logits of a 262k-vocab model at 4k tokens are
+    ~4.3 GB per sequence; chunking the unembedding + softmax (with remat on
+    the chunk body) keeps loss memory O(B * chunk * vocab) regardless of S.
+    """
+    x = trunk(params, cfg, batch)                       # (B, S, d)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    B, S, _ = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    def chunk_loss(_, xs):
+        xc, lc, mc = xs                                 # (B, chunk, .) each
+        logits = _unembed(xc, params, cfg).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+        return None, (jnp.sum(ll * mc), jnp.sum(mc))
+
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(t.shape[0], n_chunks, chunk, *t.shape[2:]), 1, 0)
+    _, (lls, ms) = jax.lax.scan(
+        jax.checkpoint(chunk_loss), None, (resh(x), resh(labels), resh(mask))
+    )
+    return -jnp.sum(lls) / jnp.maximum(jnp.sum(ms), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: Any                   # per-group tuple-of-kind states (stacked)
+    cross_caches: Any             # encdec only
+    index: jax.Array              # current position (scalar int32)
+
+
+def init_decode_state(
+    params, cfg: ArchConfig, batch: int, max_seq: int,
+    encoder_out: Optional[jax.Array] = None,
+) -> DecodeState:
+    kinds = cfg.layer_kinds()
+
+    def make_group(_):
+        return tuple(
+            blocks.init_cache_for_kind(cfg, kind, batch, max_seq) for kind in kinds
+        )
+
+    caches = jax.vmap(make_group)(jnp.arange(cfg.n_groups))
+    cross = None
+    if cfg.family == "encdec":
+        assert encoder_out is not None
+
+        def make_cross(gp):
+            out = []
+            for i in range(cfg.group_size):
+                p = gp[f"sub{i}"]["cross"]
+                hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+                k = layers.dense(encoder_out, p["wk"]).reshape(
+                    batch, -1, hkv, hd)
+                v = layers.dense(encoder_out, p["wv"]).reshape(
+                    batch, -1, hkv, hd)
+                out.append(attn_lib.KVCache(k, v))
+            return tuple(out)
+
+        cross = jax.vmap(lambda g: make_cross(g))(params["blocks"])
+    return DecodeState(caches=caches, cross_caches=cross, index=jnp.zeros((), jnp.int32))
+
+
+def decode_step(
+    params, cfg: ArchConfig, state: DecodeState, tokens: jax.Array,
+) -> Tuple[jax.Array, DecodeState]:
+    """One token for every sequence: tokens (B, 1) -> logits (B, 1, vocab)."""
+    B = tokens.shape[0]
+    x = layers.embed(tokens, params["embed"])
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    positions = state.index[None] + jnp.zeros((B, 1), jnp.int32)
+
+    if state.cross_caches is None:
+
+        def body(h, xs):
+            gp, gcache = xs
+            h, new_caches = blocks.apply_group(
+                h, gp, cfg, positions=positions, causal=True,
+                caches=gcache, cache_index=state.index,
+            )
+            return h, new_caches
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], state.caches))
+    else:
+
+        def body(h, xs):
+            gp, gcache, gcross = xs
+            h, new_caches = blocks.apply_group(
+                h, gp, cfg, positions=positions, causal=True,
+                caches=gcache, cache_index=state.index, cross_caches=gcross,
+            )
+            return h, new_caches
+
+        x, new_caches = jax.lax.scan(
+            body, x, (params["blocks"], state.caches, state.cross_caches)
+        )
+
+    x = blocks._norm(x, params["final_norm"], cfg)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(x, params["embed"])
+    else:
+        logits = layers.dense(x, params["head"])
+    new_state = DecodeState(
+        caches=new_caches, cross_caches=state.cross_caches, index=state.index + 1
+    )
+    return logits, new_state
+
+
+def prefill(
+    params, cfg: ArchConfig, batch: Dict[str, jax.Array], max_seq: int,
+) -> Tuple[jax.Array, DecodeState]:
+    """Run the full prompt, building decode caches (serving prefill path).
+
+    Returns (last-position logits, DecodeState ready for decode_step).
+    Implemented as forward + cache construction through decode-shaped
+    updates; for simplicity the caches are built by re-projecting K/V per
+    group (no attention recompute).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    encoder_out = None
+    if cfg.family == "encdec":
+        encoder_out = _run_encoder(batch["frames"], params, cfg)
+    state = init_decode_state(params, cfg, B, max_seq, encoder_out=encoder_out)
+    logits = forward(params, cfg, batch)
+    # Populate caches by replaying K/V projections blockwise.
+    # (The dry-run lowers decode_step and forward separately; this utility is
+    # for the CPU serving example, where S is small.)
+    def write_token(state, t):
+        logits_t, state = decode_step(params, cfg, state, tokens[:, t][:, None])
+        return state, logits_t
+
+    state, _ = jax.lax.scan(write_token, state, jnp.arange(S))
+    return logits[:, -1:], state

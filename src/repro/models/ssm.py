@@ -1,0 +1,415 @@
+"""State-space / recurrent blocks: Mamba (Jamba's 7/8 layers) and xLSTM
+(mLSTM matrix-memory + sLSTM scalar-memory blocks).
+
+Training/prefill uses a chunked scan: a `lax.scan` over sequence chunks with
+an associative scan inside each chunk, so activation memory is
+O(B * chunk * d_inner * d_state) instead of O(B * S * ...).  Decode is a
+single O(1) state update — this is why the ``long_500k`` shape runs for the
+SSM/hybrid architectures and is skipped for full attention.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel.logical import shard
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, v1 parameterization)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    h: jax.Array          # (B, d_inner, d_state) SSM state
+    conv: jax.Array       # (B, d_conv - 1, d_inner) causal-conv tail
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    mc = cfg.mamba
+    di = mc.expand * d
+    dtr = mc.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    dt = cfg.jax_dtype
+    return {
+        "w_in": layers._init_dense(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, di)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_x": layers._init_dense(ks[2], di, dtr + 2 * mc.d_state, dt),
+        "w_dt": layers._init_dense(ks[3], dtr, di, dt),
+        "b_dt": jnp.zeros((di,), jnp.float32),
+        # S4D-real init: A_log = log(1..d_state), broadcast over channels.
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": layers._init_dense(ks[4], di, d, dt),
+    }
+
+
+def _mamba_inner(x_in, p, cfg):
+    """Shared projections: returns (dA, dBx, C, x_conv) per token."""
+    mc = cfg.mamba
+    dtr = mc.resolved_dt_rank(cfg.d_model)
+    xdb = layers.dense(x_in, p["w_x"]).astype(jnp.float32)
+    dt, B_ssm, C_ssm = jnp.split(xdb, [dtr, dtr + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        layers.dense(dt.astype(x_in.dtype), p["w_dt"]).astype(jnp.float32) + p["b_dt"]
+    )  # (..., di)
+    A = -jnp.exp(p["A_log"])  # (di, ds)
+    dA = jnp.exp(dt[..., None] * A)                     # (..., di, ds)
+    dBx = dt[..., None] * B_ssm[..., None, :] * x_in.astype(jnp.float32)[..., None]
+    return dA, dBx, C_ssm
+
+
+def mamba_block(
+    x: jax.Array,
+    p,
+    cfg,
+    *,
+    state: Optional[MambaState] = None,
+    chunk: int = 16,
+) -> Tuple[jax.Array, Optional[MambaState]]:
+    """x: (B, S, d) -> (B, S, d).  state!=None => decode (S==1)."""
+    B, S, d = x.shape
+    mc = cfg.mamba
+    di = mc.expand * d
+    xz = layers.dense(x, p["w_in"])
+    x_in, z = jnp.split(xz, 2, axis=-1)         # (B, S, di) each
+    x_in = shard(x_in, "batch", "seq", "mlp")
+
+    if state is not None:
+        # --- decode: O(1) update --------------------------------------------
+        conv_ctx = jnp.concatenate([state.conv, x_in.astype(state.conv.dtype)], axis=1)
+        w = p["conv_w"].astype(jnp.float32)     # (dc, di)
+        xc = jnp.einsum("btd,td->bd", conv_ctx.astype(jnp.float32), w) + p["conv_b"].astype(jnp.float32)
+        xc = jax.nn.silu(xc)[:, None, :].astype(x.dtype)            # (B, 1, di)
+        dA, dBx, C_ssm = _mamba_inner(xc, p, cfg)
+        h = state.h * dA[:, 0] + dBx[:, 0]                           # (B, di, ds)
+        y = jnp.einsum("bds,bs->bd", h, C_ssm[:, 0])[:, None, :]
+        y = y + p["D"] * xc.astype(jnp.float32)
+        new_state = MambaState(h=h, conv=conv_ctx[:, 1:])
+        out = layers.dense(
+            (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["w_out"]
+        )
+        return shard(out, "batch", "seq", "embed"), new_state
+
+    # --- training / prefill: chunked selective scan --------------------------
+    dc = mc.d_conv
+    xp = jnp.pad(x_in, ((0, 0), (dc - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(jnp.float32)
+    xc = sum(
+        xp[:, i : i + S].astype(jnp.float32) * w[i] for i in range(dc)
+    ) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)        # (B, S, di)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    def chunk_body(h, xc_c):
+        # Discretization (dt/B/C projections, exp) fused INTO the chunk body:
+        # the (B, chunk, di, d_state) tensors exist one chunk at a time
+        # instead of O(S) — at 32k tokens x d_inner 16k the full-sequence
+        # version is ~34 TB/device (EXPERIMENTS.md §Perf, jamba iteration 1).
+        dA_c, dBx_c, C_c = _mamba_inner(xc_c, p, cfg)
+
+        def combine(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        # Prefix products/sums within the chunk (inclusive).
+        pA, pBx = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+        h_c = pA * h[:, None] + pBx             # (B, chunk, di, ds)
+        y_c = jnp.einsum("bcds,bcs->bcd", h_c, C_c)
+        return h_c[:, -1], y_c
+
+    resh = lambda t: jnp.moveaxis(t.reshape(B, n_chunks, chunk, *t.shape[2:]), 1, 0)
+    h0 = jnp.zeros((B, di, mc.d_state), jnp.float32)
+    # checkpoint: backward recomputes one chunk at a time; only the per-chunk
+    # carry states (B, di, ds) are saved across the sequence.
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, resh(xc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    out = layers.dense((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["w_out"])
+    return shard(out, "batch", "seq", "embed"), None
+
+
+def init_mamba_state(cfg, batch: int) -> MambaState:
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, di, mc.d_state), jnp.float32),
+        conv=jnp.zeros((batch, mc.d_conv - 1, di), cfg.jax_dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ---------------------------------------------------------------------------
+
+def _chunked_scan(step_fn, init_state, seq_tensors, S: int, chunk: int = 64):
+    """Two-level recurrent scan: outer over chunks (carries saved), inner
+    over tokens inside a jax.checkpoint'd chunk body.
+
+    Backward memory is O(S/chunk * |state|) saved carries plus one chunk of
+    recomputed residuals — without this, AD of a 4k-step scan over the
+    mLSTM's (B, H, hd, hd) matrix memory saves ~17 GB/layer.
+
+    seq_tensors: pytree of (B, S, ...) arrays; returns (final_state, ys)
+    with ys stacked back to (B, S, ...).
+    """
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    def to_chunks(t):  # (B, S, ...) -> (n_chunks, chunk, B, ...)
+        B = t.shape[0]
+        t = jnp.moveaxis(t, 1, 0).reshape(n_chunks, chunk, B, *t.shape[2:])
+        return t
+
+    xs = jax.tree_util.tree_map(to_chunks, seq_tensors)
+
+    def chunk_body(state, chunk_xs):
+        state, ys = jax.lax.scan(step_fn, state, chunk_xs)
+        return state, ys
+
+    final, ys = jax.lax.scan(jax.checkpoint(chunk_body), init_state, xs)
+    # ys: (n_chunks, chunk, B, ...) -> (B, S, ...)
+    ys = ys.reshape(n_chunks * chunk, *ys.shape[2:])
+    return final, jnp.moveaxis(ys, 0, 1)
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, hd, hd) matrix memory
+    n: jax.Array   # (B, H, hd) normalizer
+    m: jax.Array   # (B, H) log-space stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd)
+    n: jax.Array   # (B, H, hd)
+    h: jax.Array   # (B, H, hd)
+    m: jax.Array   # (B, H)
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    di = 2 * d                       # up-projection factor 2 (xLSTM block)
+    H = cfg.n_heads
+    hd = di // H
+    ks = jax.random.split(key, 7)
+    dt = cfg.jax_dtype
+    return {
+        "w_up": layers._init_dense(ks[0], d, 2 * di, dt),
+        "w_q": layers._init_dense(ks[1], di, di, dt),
+        "w_k": layers._init_dense(ks[2], di, di, dt),
+        "w_v": layers._init_dense(ks[3], di, di, dt),
+        "w_i": layers._init_dense(ks[4], di, H, dt),
+        "w_f": layers._init_dense(ks[5], di, H, dt),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # forget-gate bias init
+        "w_down": layers._init_dense(ks[6], di, d, dt),
+    }
+
+
+def mlstm_block(x, p, cfg, *, state: Optional[MLSTMState] = None):
+    """mLSTM block: up-proj, matrix-memory recurrence, gated down-proj."""
+    B, S, d = x.shape
+    di = 2 * d
+    H = cfg.n_heads
+    hd = di // H
+    up = layers.dense(x, p["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)            # (B, S, di)
+    xm = shard(xm, "batch", "seq", "mlp")
+
+    def heads(w):
+        return layers.dense(xm, w).reshape(B, S, H, hd).astype(jnp.float32)
+
+    q, k, v = heads(p["w_q"]), heads(p["w_k"]) * hd ** -0.5, heads(p["w_v"])
+    i_pre = (layers.dense(xm, p["w_i"]).astype(jnp.float32) + p["b_i"])  # (B,S,H)
+    f_pre = (layers.dense(xm, p["w_f"]).astype(jnp.float32) + p["b_f"])
+
+    if state is None:
+        st = MLSTMState(
+            C=jnp.zeros((B, H, hd, hd), jnp.float32),
+            n=jnp.zeros((B, H, hd), jnp.float32),
+            m=jnp.full((B, H), -1e30, jnp.float32),
+        )
+    else:
+        st = state
+
+    def step(s: MLSTMState, t):
+        qt, kt, vt, it, ft = t                   # (B,H,hd) x3, (B,H) x2
+        log_f = -jax.nn.softplus(-ft)            # log sigmoid(f)
+        m_new = jnp.maximum(log_f + s.m, it)
+        f_sc = jnp.exp(log_f + s.m - m_new)[..., None]
+        i_sc = jnp.exp(it - m_new)[..., None]
+        C = f_sc[..., None] * s.C + (i_sc * vt)[..., None] * kt[..., None, :]
+        n = f_sc * s.n + i_sc * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt))[..., None], 1.0
+        )
+        h = jnp.einsum("bhij,bhj->bhi", C, qt) / denom
+        return MLSTMState(C, n, m_new), h
+
+    if state is None and S > 1:
+        # Chunkwise-parallel form: per-token (hd x hd) matrix-memory updates
+        # become (chunk x chunk) flash-like block matmuls — the xLSTM kernel
+        # formulation.  Equivalent to the sequential scan (tests), ~50x less
+        # HBM traffic at hd=512 (EXPERIMENTS.md §Perf, xlstm).
+        hs, _ = _mlstm_chunkwise(q, k, v, i_pre, f_pre, st)
+        h = hs.reshape(B, S, di).astype(x.dtype)
+        new_state = None
+    else:
+        new_state, hs = _chunked_scan(step, st, (q, k, v, i_pre, f_pre), S)
+        h = hs.reshape(B, S, di).astype(x.dtype)
+    out = layers.dense(h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["w_down"])
+    return shard(out, "batch", "seq", "embed"), (new_state if state is not None else None)
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, st: MLSTMState, chunk: int = 64):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    Within a chunk (log-space gates): F_t = cumsum(log f), a_s = i_s - F_s,
+    M_t = max(m_prev, cummax a_s), decay D[t,s] = exp(a_s - M_t) for s<=t.
+      h_t = [exp(m_prev - M_t) (C_prev q_t) + sum_s D[t,s](q_t k_s) v_s]
+            / max(|exp(m_prev - M_t)(n_prev q_t) + sum_s D[t,s](q_t k_s)|, 1)
+    State closes each chunk with the same quantities at t = chunk.
+    q/k/v: (B, S, H, hd) f32; i_pre/f_pre: (B, S, H).
+    """
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    def to_c(t):  # (B,S,...) -> (n_chunks, B, chunk, ...)
+        return jnp.moveaxis(
+            t.reshape(B, n_chunks, chunk, *t.shape[2:]), 1, 0)
+
+    def chunk_body(state, xs):
+        qc, kc, vc, ic, fc = xs            # (B, chunk, H, ...) per chunk
+        log_f = -jax.nn.softplus(-fc)      # (B, chunk, H)
+        F = jnp.cumsum(log_f, axis=1)      # inclusive
+        a = ic - F                         # (B, chunk, H)
+        M = jnp.maximum(
+            state.m[:, None], jax.lax.cummax(a, axis=1))  # (B, chunk, H)
+        # intra-chunk: D[t,s] = exp(F_t - F_s + i_s - m_t) = exp(a_s - M_t)
+        D = jnp.exp(a[:, None, :, :] - M[:, :, None, :])  # (B, t, s, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri[None, :, :, None], D, 0.0)
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc)        # (B, t, s, H)
+        w = D * qk
+        num_intra = jnp.einsum("btsh,bshd->bthd", w, vc)
+        den_intra = jnp.sum(w, axis=2)                    # (B, t, H)
+        # inter-chunk: carry C_prev / n_prev with stabilizer m_prev
+        scale = jnp.exp(state.m[:, None] - M)             # (B, t, H)
+        num_inter = scale[..., None] * jnp.einsum(
+            "bhij,bthj->bthi", state.C, qc)
+        den_inter = scale * jnp.einsum("bhd,bthd->bth", state.n, qc)
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]  # (B, t, H, hd)
+        # close the chunk: state at t = chunk
+        M_c = M[:, -1]                                    # (B, H)
+        w_end = jnp.exp(a - M_c[:, None])                 # (B, s, H)
+        C_new = scale[:, -1][..., None, None] * state.C + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_end, vc, kc)
+        n_new = scale[:, -1][..., None] * state.n + jnp.einsum(
+            "bsh,bshd->bhd", w_end, kc)
+        m_new = F[:, -1] + M_c        # m_t = F_t + M_t at t = chunk
+        return MLSTMState(C_new, n_new, m_new), h
+
+    final, hs = jax.lax.scan(
+        jax.checkpoint(chunk_body), st,
+        (to_c(q), to_c(k), to_c(v), to_c(i_pre), to_c(f_pre)),
+    )
+    # (n_chunks, B, chunk, H, hd) -> (B, S, H*hd)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+    return hs.reshape(B, S, H * hd), final
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 9)
+    dt = cfg.jax_dtype
+    p = {f"w_{g}": layers._init_dense(ks[i], d, d, dt) for i, g in enumerate("izfo")}
+    p.update({f"r_{g}": (jax.random.normal(ks[4 + i], (H, hd, hd)) * hd ** -0.5).astype(dt)
+              for i, g in enumerate("izfo")})
+    p["b_f"] = jnp.full((H, hd), 3.0, jnp.float32)
+    k_up, k_dn = jax.random.split(ks[8])
+    ff = int(8 / 3 * d) // 8 * 8
+    p["w_ff_up"] = layers._init_dense(k_up, d, 2 * ff, dt)
+    p["w_ff_down"] = layers._init_dense(k_dn, ff, d, dt)
+    return p
+
+
+def slstm_block(x, p, cfg, *, state: Optional[SLSTMState] = None):
+    """sLSTM block: scalar-memory LSTM with head-wise recurrence + GLU FFN."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    pre = {
+        g: layers.dense(x, p[f"w_{g}"]).reshape(B, S, H, hd).astype(jnp.float32)
+        for g in "izfo"
+    }
+    if state is None:
+        st = SLSTMState(
+            c=jnp.zeros((B, H, hd), jnp.float32),
+            n=jnp.zeros((B, H, hd), jnp.float32),
+            h=jnp.zeros((B, H, hd), jnp.float32),
+            m=jnp.full((B, H), -1e30, jnp.float32),
+        )
+    else:
+        st = state
+
+    rec = {g: p[f"r_{g}"].astype(jnp.float32) for g in "izfo"}
+
+    def step(s: SLSTMState, t):
+        def r(g):
+            return jnp.einsum("bhj,hij->bhi", s.h, rec[g])
+
+        i_pre = t["i"] + r("i")
+        f_pre = t["f"] + r("f") + p["b_f"]
+        z_t = jnp.tanh(t["z"] + r("z"))
+        o_t = jax.nn.sigmoid(t["o"] + r("o"))
+        log_f = -jax.nn.softplus(-f_pre)               # (B, H, hd)
+        m_new = jnp.maximum(
+            jnp.max(log_f, -1) + s.m, jnp.max(i_pre, -1)
+        )                                              # (B, H)
+        f_sc = jnp.exp(log_f + (s.m - m_new)[..., None])
+        i_sc = jnp.exp(i_pre - m_new[..., None])
+        c = f_sc * s.c + i_sc * z_t
+        n = f_sc * s.n + i_sc
+        h = o_t * c / jnp.maximum(n, 1.0)
+        return SLSTMState(c, n, h, m_new), h
+
+    new_state, hs = _chunked_scan(step, st, pre, S)
+    h = hs.reshape(B, S, d).astype(x.dtype)
+    # GLU feed-forward (proj factor 4/3, xLSTM-style), fused into the block.
+    up = layers.dense(h, p["w_ff_up"])
+    a, b = jnp.split(up, 2, axis=-1)
+    out = layers.dense(jax.nn.gelu(a.astype(jnp.float32)).astype(x.dtype) * b, p["w_ff_down"])
+    return shard(out, "batch", "seq", "embed"), (new_state if state is not None else None)
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(c=z(), n=z(), h=z(), m=jnp.full((batch, H), -1e30, jnp.float32))

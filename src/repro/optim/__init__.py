@@ -1,0 +1,15 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    warmup_cosine,
+    global_norm,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "global_norm",
+]

@@ -1,0 +1,133 @@
+"""AdamW with gradient clipping, warmup-cosine schedule, and compressed
+optimizer state (bf16 or block-quantized int8 moments).
+
+State compression is the memory-side analogue of gradient compression: the
+477B-parameter configs only fit a 256-chip pod's HBM with sub-fp32 moments
+(fp32 m+v alone would be 3.8 GB/chip * 4). int8 moments use 128-wide
+block scales (8-bit-Adam style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BlockQ(NamedTuple):
+    """Block-quantized tensor: q int8, scale f32 per 128-wide block."""
+
+    q: jax.Array
+    scale: jax.Array
+
+
+_BLOCK = 128
+
+
+def _bq_encode(x: jax.Array) -> BlockQ:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return BlockQ(q=q, scale=scale.astype(jnp.float32))
+
+
+def _bq_decode(bq: BlockQ, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (bq.q.astype(jnp.float32) * bq.scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"       # float32 | bfloat16 | int8
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    if cfg.state_dtype == "int8":
+        zeros = lambda p: _bq_encode(jnp.zeros_like(p, jnp.float32))
+    else:
+        dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    lr: jax.Array,
+    cfg: AdamWConfig,
+) -> Tuple[Any, Any]:
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        clip = jnp.asarray(1.0)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    int8 = cfg.state_dtype == "int8"
+    state_dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": None}[cfg.state_dtype]
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _bq_decode(m, p.shape) if int8 else m.astype(jnp.float32)
+        vf = _bq_decode(v, p.shape) if int8 else v.astype(jnp.float32)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        update = (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * pf
+        new_p = (pf - lr * update).astype(p.dtype)
+        new_m = _bq_encode(mf) if int8 else mf.astype(state_dt)
+        new_v = _bq_encode(vf) if int8 else vf.astype(state_dt)
+        return new_p, new_m, new_v
+
+    is_bq = lambda x: isinstance(x, BlockQ)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"], is_leaf=is_bq)
+    flat_v = jax.tree_util.tree_leaves(state["v"], is_leaf=is_bq)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+def warmup_cosine(
+    base_lr: float, warmup: int, total: int, min_frac: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,66 @@
+"""Gradient compression with error feedback (int8, 128-wide block scales).
+
+For cross-pod data parallelism the gradient all-reduce crosses the slow
+inter-pod links; compressing to int8 cuts that traffic 2x vs bf16 / 4x vs
+f32.  Plain quantization biases training; error feedback (Seide et al.,
+1-bit SGD lineage) accumulates the quantization residual locally and adds it
+back before the next step's compression, making the scheme unbiased in the
+long run.
+
+Usage (composes with any optimizer):
+
+    ef = init_error_feedback(grads)
+    (q_grads, ef) = compress_with_feedback(grads, ef)
+    # ... all-reduce q_grads (int8 payload + f32 block scales) ...
+    grads = decompress(q_grads)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import BlockQ, _bq_decode, _bq_encode
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree_util.tree_map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_with_feedback(grads, ef_state) -> Tuple[Any, Any]:
+    """Returns (BlockQ pytree, new error-feedback state)."""
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q = _bq_encode(corrected)
+        residual = corrected - _bq_decode(q, g.shape)
+        return q, residual
+
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    efs = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    return qs, efs
+
+
+def decompress(q_grads, template) -> Any:
+    is_bq = lambda x: isinstance(x, BlockQ)
+    flat_q = jax.tree_util.tree_leaves(q_grads, is_leaf=is_bq)
+    flat_t, tree = jax.tree_util.tree_flatten(template)
+    out = [
+        _bq_decode(q, t.shape).astype(t.dtype) for q, t in zip(flat_q, flat_t)
+    ]
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
+def compressed_bytes(q_grads) -> int:
+    """Wire size of the compressed payload (int8 + block scales)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        q_grads, is_leaf=lambda x: isinstance(x, BlockQ)
+    ):
+        total += leaf.q.size + leaf.scale.size * 4
+    return total

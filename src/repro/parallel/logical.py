@@ -1,0 +1,81 @@
+"""Logical axis sharding: model code annotates, the runtime decides.
+
+Model code calls `shard(x, "batch", "seq", "model_d")` with *logical* axis
+names.  Outside a mesh context this is a no-op (CPU smoke tests); inside
+`use_rules(mesh, rules)` each logical name maps to zero or more mesh axes and
+the annotation becomes `jax.lax.with_sharding_constraint`.
+
+This is the multi-pod analogue of the paper's strided-memory-access layout
+optimization: the rule table is the "data layout" that keeps the compiled
+collective schedule conflict-free (no resharding between layers).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxes]
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Rules]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Rules):
+    """Activate a (mesh, logical-rule) context for `shard` annotations."""
+    prev = _current()
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def resolve_spec(names: Sequence[Optional[str]], rules: Rules) -> P:
+    axes = []
+    used: set = set()
+    for n in names:
+        if n is None:
+            axes.append(None)
+            continue
+        a = rules.get(n)
+        # A mesh axis may appear only once in a PartitionSpec; later logical
+        # dims that map to an already-used axis fall back to replication.
+        if a is None:
+            axes.append(None)
+        elif isinstance(a, tuple):
+            fresh = tuple(x for x in a if x not in used)
+            used.update(fresh)
+            axes.append(fresh if fresh else None)
+        else:
+            if a in used:
+                axes.append(None)
+            else:
+                used.add(a)
+                axes.append(a)
+    return P(*axes)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate `x` with the sharding implied by logical axis `names`."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    spec = resolve_spec(names, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for(mesh: Mesh, rules: Rules, *names: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(names, rules))

@@ -1,0 +1,3 @@
+from repro.runtime.supervisor import Supervisor, TrainLoopConfig
+
+__all__ = ["Supervisor", "TrainLoopConfig"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run's 512 fake devices are
+# set only inside repro.launch.dryrun / subprocess integration tests).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

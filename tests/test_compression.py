@@ -1,0 +1,52 @@
+"""Error-feedback gradient compression: unbiasedness + convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import (
+    compress_with_feedback,
+    compressed_bytes,
+    decompress,
+    init_error_feedback,
+)
+
+
+def test_compression_wire_size():
+    g = {"w": jnp.ones((1024, 256), jnp.float32)}
+    q, _ = compress_with_feedback(g, init_error_feedback(g))
+    f32_bytes = 1024 * 256 * 4
+    assert compressed_bytes(q) < f32_bytes / 3.5   # ~int8 + scale overhead
+
+
+def test_error_feedback_accumulates_residual():
+    """With a constant gradient, compressed updates converge to the true sum
+    (residuals are re-injected, never lost)."""
+    g = {"w": jnp.full((256,), 1e-3) + jnp.arange(256) * 1e-6}
+    ef = init_error_feedback(g)
+    total = jnp.zeros((256,))
+    for _ in range(50):
+        q, ef = compress_with_feedback(g, ef)
+        total = total + decompress(q, g)["w"]
+    np.testing.assert_allclose(total, 50 * g["w"], rtol=0.02)
+
+
+def test_training_converges_with_compression():
+    cfg = AdamWConfig(weight_decay=0.0)
+    target = jnp.asarray([1.0, -2.0, 0.5, 3.0])
+    params = {"w": jnp.zeros((4,))}
+    state = adamw_init(params, cfg)
+    ef = init_error_feedback(params)
+
+    @jax.jit
+    def step(params, state, ef):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        q, ef = compress_with_feedback(g, ef)
+        g_hat = decompress(q, g)          # (= after the int8 all-reduce)
+        p, s = adamw_update(g_hat, state, params, jnp.asarray(0.05), cfg)
+        return p, s, ef
+
+    for _ in range(300):
+        params, state, ef = step(params, state, ef)
+    np.testing.assert_allclose(params["w"], target, atol=0.05)

@@ -1,0 +1,99 @@
+"""Property-based tests of the dataflow/tiling math (hypothesis)."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import (
+    Dataflow,
+    GemmShape,
+    SpatialUnrolling,
+    TemporalUnrolling,
+    OUTPUT_STATIONARY,
+    WEIGHT_STATIONARY,
+    arithmetic_intensity,
+    choose_loop_order,
+    roofline_time_s,
+)
+
+dims = st.integers(min_value=1, max_value=512)
+arr = st.sampled_from([1, 2, 4, 8, 16])
+
+
+@given(M=dims, K=dims, N=dims, Mu=arr, Ku=arr, Nu=arr)
+@settings(max_examples=200, deadline=None)
+def test_spatial_utilization_bounds(M, K, N, Mu, Ku, Nu):
+    df = Dataflow(spatial=SpatialUnrolling(Mu, Ku, Nu))
+    g = GemmShape(M, K, N)
+    su = df.spatial_utilization(g)
+    assert 0 < su <= 1
+    # SU == 1 iff every dim is a multiple of its unrolling
+    if M % Mu == 0 and K % Ku == 0 and N % Nu == 0:
+        assert su == 1.0
+    else:
+        assert su < 1.0
+
+
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_padded_shape_consistency(M, K, N):
+    sp = SpatialUnrolling()
+    g = GemmShape(M, K, N)
+    p = sp.padded_shape(g)
+    assert p.M % sp.Mu == 0 and p.K % sp.Ku == 0 and p.N % sp.Nu == 0
+    assert p.M - g.M < sp.Mu and p.K - g.K < sp.Ku and p.N - g.N < sp.Nu
+    m, k, n = sp.tile_counts(g)
+    assert (m * sp.Mu, k * sp.Ku, n * sp.Nu) == (p.M, p.K, p.N)
+
+
+@given(m=st.integers(1, 6), k=st.integers(1, 6), n=st.integers(1, 6),
+       order=st.permutations(["m1", "k1", "n1"]))
+@settings(max_examples=50, deadline=None)
+def test_temporal_iterate_covers_all_tiles(m, k, n, order):
+    t = TemporalUnrolling(tuple(order))
+    seen = list(t.iterate((m, k, n)))
+    assert len(seen) == m * k * n
+    assert len(set(seen)) == m * k * n
+    assert all(0 <= a < m and 0 <= b < k and 0 <= c < n for a, b, c in seen)
+
+
+def test_output_stationary_innermost_k():
+    t = TemporalUnrolling(OUTPUT_STATIONARY)
+    assert t.is_output_stationary and not t.is_weight_stationary
+    # consecutive iterations differ only in k1 until a boundary
+    it = list(t.iterate((2, 3, 2)))
+    assert it[0][:1] + it[0][2:] == it[1][:1] + it[1][2:]
+
+
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_choose_loop_order_prefers_output_stationary(M, K, N):
+    # Paper Sec 2.3: partial-sum width (32b) > operand width (8b) => OS.
+    t = choose_loop_order(GemmShape(M, K, N), SpatialUnrolling())
+    assert t.order == OUTPUT_STATIONARY
+
+
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_roofline_terms_positive_and_scaling(M, K, N):
+    g = GemmShape(M, K, N)
+    c, m = roofline_time_s(g, peak_flops=1e12, mem_bw=1e11)
+    assert c > 0 and m > 0
+    c2, m2 = roofline_time_s(g, peak_flops=2e12, mem_bw=2e11)
+    assert math.isclose(c / c2, 2.0) and math.isclose(m / m2, 2.0)
+    ai = arithmetic_intensity(g)
+    assert math.isclose(ai, (c * 1e12) / (m * 1e11) * (1e11 / 1e12) * (1e12 / 1e11), rel_tol=1)
+    assert ai > 0
+
+
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_overall_equals_spatial_times_temporal(M, K, N):
+    df = Dataflow()
+    g = GemmShape(M, K, N)
+    compute = df.compute_cycles(g)
+    total = compute + 137  # arbitrary stall cycles
+    su = df.spatial_utilization(g)
+    tu = df.temporal_utilization(compute, total)
+    ou = df.overall_utilization(g, total)
+    assert math.isclose(ou, su * tu, rel_tol=1e-12)

@@ -1,0 +1,112 @@
+"""Simulator invariants + reproduction-band checks against the paper."""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import GemmShape
+from repro.core.generator import OpenGeMMConfig
+from repro.core.simulator import (
+    OpenGeMMSimulator,
+    ablation_architectures,
+    fig5_median_utilizations,
+    random_fig5_shapes,
+)
+from repro.core.workloads import TABLE2_MODELS, TABLE2_PAPER
+from repro.core.gemmini_model import GemminiModel
+
+dim8 = st.integers(1, 32).map(lambda i: 8 * i)
+
+
+@given(M=dim8, K=dim8, N=dim8)
+@settings(max_examples=60, deadline=None)
+def test_utilization_bounded(M, K, N):
+    sim = OpenGeMMSimulator()
+    u = sim.utilization(GemmShape(M, K, N), repeats=10)
+    assert 0 < u <= 1
+
+
+@given(M=dim8, K=dim8, N=dim8)
+@settings(max_examples=40, deadline=None)
+def test_mechanisms_monotone(M, K, N):
+    """Enabling each mechanism never hurts utilization materially.
+
+    (Exactly at degenerate single-K-tile workloads, pre-fetch adds a few fill
+    cycles with nothing to hide — the paper's Fig. 5 whiskers show the same
+    overlap at the bottom — so the property holds to 2%.)
+    """
+    g = GemmShape(M, K, N)
+    archs = ablation_architectures()
+    u = {k: OpenGeMMSimulator(c).utilization(g, repeats=10) for k, c in archs.items()}
+    tol = lambda x: x * 1.02 + 1e-9
+    assert u["arch1_baseline"] <= tol(u["arch2_cpl"])
+    assert u["arch2_cpl"] <= tol(u["arch3_cpl_buf2"])
+    assert u["arch3_cpl_buf2"] <= tol(u["arch4_all_buf2"])
+    assert u["arch4_all_buf2"] <= tol(u["arch4_all_buf3"])
+    assert u["arch4_all_buf3"] <= tol(u["arch4_all_buf4"])
+
+
+@given(M=dim8, K=dim8, N=dim8, reps=st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_timing_decomposition(M, K, N, reps):
+    sim = OpenGeMMSimulator()
+    ts = sim.simulate_sequence([GemmShape(M, K, N)] * reps)
+    for t in ts:
+        assert t.total_cycles == (
+            t.config_cycles + t.fill_cycles + t.compute_cycles
+            + t.input_stall_cycles + t.output_stall_cycles
+        )
+        assert t.compute_cycles >= 1
+    # CPL: later calls pay less config than the first
+    if reps > 1:
+        assert ts[1].config_cycles <= ts[0].config_cycles
+
+
+def test_grouped_matches_sequence():
+    sim = OpenGeMMSimulator()
+    shapes = [GemmShape(64, 128, 64)] * 7 + [GemmShape(128, 64, 256)] * 3
+    seq_total = sum(t.total_cycles for t in sim.simulate_sequence(shapes))
+    grp = sim.report_grouped([(GemmShape(64, 128, 64), 7), (GemmShape(128, 64, 256), 3)])
+    assert abs(grp.total_cycles - seq_total) / seq_total < 0.01
+
+
+def test_peak_gops_matches_paper():
+    assert OpenGeMMConfig().peak_gops() == pytest.approx(204.8)
+
+
+def test_fig5_reproduction_band():
+    """Median-utilization ratios land near the paper's Fig. 5 claims."""
+    meds = fig5_median_utilizations(random_fig5_shapes(200, seed=1))
+    cpl = meds["arch2_cpl"] / meds["arch1_baseline"]
+    buf = meds["arch3_cpl_buf2"] / meds["arch2_cpl"]
+    sma = meds["arch4_all_buf2"] / meds["arch3_cpl_buf2"]
+    # paper: 1.4x / 2.02x / 1.18x — accept a generous band
+    assert 1.15 < cpl < 1.7, cpl
+    assert 1.6 < buf < 2.4, buf
+    assert 1.05 < sma < 1.35, sma
+    # depth sweep keeps improving (paper: Buf.Depth 3, 4)
+    assert meds["arch4_all_buf3"] >= meds["arch4_all_buf2"]
+    assert meds["arch4_all_buf4"] >= meds["arch4_all_buf3"]
+
+
+@pytest.mark.parametrize("name", list(TABLE2_MODELS))
+def test_table2_reproduction(name):
+    """SU/TU/OU within a few points of the paper's Table 2."""
+    sim = OpenGeMMSimulator()
+    rep = sim.report_grouped(TABLE2_MODELS[name]())
+    su_p, tu_p, ou_p, cc_p = TABLE2_PAPER[name]
+    assert abs(rep.su * 100 - su_p) < 4.0, (rep.su * 100, su_p)
+    assert abs(rep.tu * 100 - tu_p) < 4.0, (rep.tu * 100, tu_p)
+    assert abs(rep.ou * 100 - ou_p) < 5.0, (rep.ou * 100, ou_p)
+    # cycle count within 2.5x (batch size back-derived, not stated in paper)
+    assert 0.4 < rep.total_cycles / cc_p < 2.5
+
+
+def test_gemmini_utilization_regime():
+    """The Fig. 7 baseline sits in the measured ~6% average-TU regime [32]."""
+    gm = GemminiModel()
+    sizes = [GemmShape(s, s, s) for s in (8, 16, 32, 64, 128)]
+    tus = [gm.temporal_utilization(g) for g in sizes]
+    avg = sum(tus) / len(tus)
+    assert 0.01 < avg < 0.15, tus

@@ -1,0 +1,43 @@
+"""Workload extraction sanity: MAC counts vs published model costs."""
+
+import pytest
+
+from repro.core.workloads import (
+    bert_base,
+    mobilenet_v2,
+    resnet18,
+    total_macs,
+    vit_b_16,
+)
+
+
+def test_resnet18_macs():
+    # torchvision ResNet18 @224: ~1.82 GMACs per image
+    per_img = total_macs(resnet18(batch=1)) / 1e9
+    assert per_img == pytest.approx(1.82, rel=0.05), per_img
+
+
+def test_mobilenet_v2_macs():
+    # ~0.30-0.32 GMACs per image
+    per_img = total_macs(mobilenet_v2(batch=1)) / 1e9
+    assert per_img == pytest.approx(0.31, rel=0.15), per_img
+
+
+def test_vit_b16_macs():
+    # ViT-B/16 @224: ~17.6 GMACs per image
+    per_img = total_macs(vit_b_16(batch=1)) / 1e9
+    assert per_img == pytest.approx(17.6, rel=0.05), per_img
+
+
+def test_bert_base_macs():
+    # BERT-base @ seq 512: ~48 GMACs per sequence (incl. attention matmuls)
+    per_seq = total_macs(bert_base(batch=1)) / 1e9
+    assert per_seq == pytest.approx(48.3, rel=0.07), per_seq
+
+
+def test_depthwise_grouping_preserves_macs():
+    from repro.core.workloads import depthwise_gemm
+
+    g, count = depthwise_gemm(batch=4, hw=56, c=96, k=3, s=1, group=8)
+    # useful MACs = B * OH*OW * k*k * C regardless of grouping
+    assert g.macs * count == 4 * 56 * 56 * 9 * 96
