@@ -1,0 +1,23 @@
+# One memorable invocation per tier-1 task (see README.md).
+PY ?= python
+# src for the repro package, . so `benchmarks` resolves as a package.
+export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-all bench lint
+
+# Tier-1 verify: deterministic suite; hypothesis modules auto-skip if absent.
+test:
+	$(PY) -m pytest -x -q
+
+# Includes the property-based modules (pip install -r requirements-dev.txt).
+test-all:
+	$(PY) -m pytest -q
+
+# All paper-reproduction benchmarks as CSV (see EXPERIMENTS.md).
+bench:
+	$(PY) benchmarks/run.py
+
+# Import/syntax sweep; uses pyflakes when available, else compileall only.
+lint:
+	$(PY) -m compileall -q src benchmarks examples tests
+	-$(PY) -m pyflakes src benchmarks examples tests 2>/dev/null || true

@@ -1,9 +1,18 @@
 """Fig. 5 reproduction: utilization ablation over 500 random (M,K,N).
 
-Paper claims (medians): CPL 1.4x, +prefetch/buffering(D=2) 2.02x,
-+SMA 1.18x, all three 2.78x; deeper buffers keep improving.
-(Note the paper's per-mechanism medians multiply to 3.34x, not 2.78x —
-box-plot medians don't compose; we report both views.)
+Paper artifact: Fig. 5 (Sec. 4.2) — overall-utilization box plots for the
+four platform variants plus buffer-depth sweeps.  Paper claims (medians):
+CPL 1.4x, +prefetch/buffering(D=2) 2.02x, +SMA 1.18x, all three 2.78x;
+deeper buffers keep improving.  (Note the paper's per-mechanism medians
+multiply to 3.34x, not 2.78x — box-plot medians don't compose; we report
+both views.)
+
+Output rows (CSV via benchmarks/run.py):
+  fig5/<arch>          median overall utilization (derived: q1/q3)
+  fig5/ratio_<mech>    median ratio vs the previous arch (derived: paper)
+
+Expected runtime: ~30 s (500 shapes x 6 archs, closed-form model).
+See EXPERIMENTS.md for the calibration of csr_cycles/bank_conflict_factor.
 """
 
 from __future__ import annotations

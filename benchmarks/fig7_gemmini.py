@@ -1,8 +1,16 @@
 """Fig. 7 reproduction: area-normalized throughput (GOPS/mm^2) of OpenGeMM
 vs the Gemmini OS/WS cycle model, matrix sizes (8,8,8)..(128,128,128).
 
-Paper claims: 3.75x-16.40x vs Gemmini OS, 3.58x-15.66x vs WS; Gemmini avg
-temporal utilization ~6.25% on these sizes [32].
+Paper artifact: Fig. 7 (Sec. 4.5).  Paper claims: 3.75x-16.40x vs Gemmini
+OS, 3.58x-15.66x vs WS; Gemmini avg temporal utilization ~6.25% on these
+sizes [32].
+
+Output rows (CSV via benchmarks/run.py):
+  fig7/<size>/opengemm_gops_mm2   absolute GOPS/mm^2
+  fig7/<size>/speedup_vs_{os,ws}  ratio vs the Gemmini variant
+
+Expected runtime: <5 s.  See EXPERIMENTS.md for the Gemmini model's pinning
+to the measured ~6% utilization regime.
 """
 
 from __future__ import annotations

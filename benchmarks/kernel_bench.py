@@ -1,6 +1,21 @@
-"""Kernel micro-benchmarks: OpenGeMM Pallas kernel (interpret-mode
-correctness timing is meaningless on CPU, so we benchmark the XLA path and
-report the kernel's analytic VMEM/roofline characteristics per tile spec).
+"""Kernel micro-benchmarks + autotuner delta.
+
+Paper artifact: none directly — this is the framework's own hot-path
+benchmark (the ROADMAP "hot path measurably faster" contract).  Every row
+compares the hard-coded `tpu_kernel_spec` tile against the autotuned tile
+for the same problem, so any kernel or tuner PR shows up as a delta here.
+
+Interpret-mode timing is meaningless on CPU, so wall-clock is measured on
+the XLA path, while the tile comparison reports the analytic cycle model's
+prediction (repro.tuning.model — the same model the autotuner ranks with;
+on a TPU host re-run with REPRO_AUTOTUNE=1 and mode="wallclock" for
+measured numbers).
+
+Output rows (CSV via benchmarks/run.py):
+  kernel/gemm_MxKxN        wall-clock us/call on the XLA path
+  kernel/tuned_MxKxN       predicted speedup of tuned vs default tile
+
+Expected runtime: ~10 s on CPU.
 """
 
 from __future__ import annotations
@@ -14,6 +29,7 @@ from repro.core.dataflow import GemmShape, arithmetic_intensity
 from repro.core.generator import OpenGeMMConfig
 from repro.kernels import ops
 from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW
+from repro import tuning
 
 
 def _time(fn, *args, iters=5):
@@ -28,6 +44,10 @@ def _time(fn, *args, iters=5):
 def run():
     out = []
     cfg = OpenGeMMConfig()
+    # Memory-only cache: the delta rows must reflect *this* checkout's
+    # search, never stale winners from the user's persistent registry.
+    tuner = tuning.Autotuner(cache=tuning.TuneCache(persistent=False),
+                             persist=False)
     for mkn in [(512, 512, 512), (1024, 4096, 1024), (4096, 4096, 4096)]:
         g = GemmShape(*mkn)
         spec = cfg.tpu_kernel_spec(g)
@@ -46,6 +66,19 @@ def run():
                 f"tpu_roofline_us={max(t_c, t_m)*1e6:.1f}"
             ),
         })
+        # autotuner delta: default tile vs searched tile, same cycle model
+        res = tuner.tune(g, "bfloat16")
+        default_clk = tuning.predict_clocks(spec, g, "bfloat16")
+        tuned_clk = tuning.predict_clocks(res.spec, g, "bfloat16")
+        out.append({
+            "name": f"kernel/tuned_{mkn[0]}x{mkn[1]}x{mkn[2]}",
+            "value": round(default_clk / tuned_clk, 3),
+            "derived": (
+                f"default=({spec.tm},{spec.tk},{spec.tn}),"
+                f"tuned=({res.spec.tm},{res.spec.tk},{res.spec.tn}),"
+                f"candidates={res.candidates},pred_clk={tuned_clk:.0f}"
+            ),
+        })
     return out
 
 
@@ -55,4 +88,4 @@ def rows():
 
 if __name__ == "__main__":
     for r in run():
-        print(f"{r['name']:28s} {r['value']:>9} us/call  {r['derived']}")
+        print(f"{r['name']:28s} {r['value']:>9}  {r['derived']}")

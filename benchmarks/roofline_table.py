@@ -1,4 +1,14 @@
-"""Aggregate dry-run JSON results into the EXPERIMENTS.md roofline table."""
+"""Aggregate dry-run JSON results into the EXPERIMENTS.md roofline table.
+
+Paper artifact: none — this is the mesh-level scaling side of the ROADMAP.
+Reads benchmarks/results/dryrun*/[*.json] written by `repro.launch.dryrun`
+and emits one row per (arch, shape, mesh):
+
+  roofline/<arch>/<shape>/<mesh>   MFU % (derived: bound + time breakdown)
+
+Expected runtime: <1 s (pure aggregation; empty when no dry-run results
+exist on disk).
+"""
 
 from __future__ import annotations
 

@@ -1,8 +1,11 @@
 """Benchmark aggregator: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (the harness contract) — for
+Prints ``name,value,derived`` CSV rows (the harness contract) — for
 reproduction benchmarks `value` is the reproduced metric and `derived`
-carries the paper's reference value.
+carries the paper's reference value.  Sections: fig5, table2, fig7, table3,
+kernel (incl. autotuner deltas), plus roofline rows when dry-run results
+exist.  Expected runtime: ~1 min total on CPU; per-script details in each
+module's docstring and EXPERIMENTS.md.
 """
 
 from __future__ import annotations

@@ -1,5 +1,15 @@
 """Table 2 reproduction: utilization + cycle count on real DNN workloads
 (MobileNetV2, ResNet18, ViT-B-16, BERT-base through im2col GeMM extraction).
+
+Paper artifact: Table 2 (Sec. 4.3) — per-model SU/TU/OU percentages and
+total cycle counts on the case-study instance.
+
+Output rows (CSV via benchmarks/run.py):
+  table2/<model>/{su,tu,ou}   reproduced percentage (derived: paper value)
+  table2/<model>/cycles       reproduced cycle count (derived: paper value)
+
+Expected runtime: ~5 s.  Batch sizes are back-derived (the paper omits
+them) — see EXPERIMENTS.md "Back-derivations".
 """
 
 from __future__ import annotations

@@ -1,11 +1,15 @@
 """Table 3 / Sec 4.4 reproduction: peak performance, efficiency, and the
 derived system metrics of the case-study OpenGeMM instance.
 
-Paper: 204.8 GOPS peak (8x8x8 @ 200 MHz), 0.531 mm^2 cell / 0.62 mm^2 P&R
-area, 43.8 mW on (32,32,32) block GeMM, 4.68 TOPS/W, 329 GOPS/mm^2,
+Paper artifact: Table 3 and the Sec. 4.4 efficiency figures.  Paper:
+204.8 GOPS peak (8x8x8 @ 200 MHz), 0.531 mm^2 cell / 0.62 mm^2 P&R area,
+43.8 mW on (32,32,32) block GeMM, 4.68 TOPS/W, 329 GOPS/mm^2,
 7.55 TOPS/W/mm^2.  Peak numbers are analytic; power/area are technology
 constants we take from the paper (no synthesis here) — what we *reproduce*
 is every derived metric being consistent with the utilization model.
+
+Output rows (CSV via benchmarks/run.py): table3/<metric> with the paper's
+reference value in `derived`.  Expected runtime: <5 s.
 """
 
 from __future__ import annotations

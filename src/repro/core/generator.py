@@ -24,6 +24,28 @@ from repro.core.dataflow import (
     TemporalUnrolling,
 )
 
+# ---------------------------------------------------------------------------
+# TPU tile legality — the MXU analogue of the paper's (Mu, Ku, Nu) legality.
+# Shared by `tpu_kernel_spec` (the fixed design-point mapping) and
+# `repro.tuning` (the search over design points).
+# ---------------------------------------------------------------------------
+
+MXU_LANES = 128          # last-dim tile quantum (TN, TK)
+MXU_SUBLANES = 8         # second-minor quantum for float32 (TM)
+VMEM_BUDGET_BYTES = 96 * 1024 * 1024   # working-set ceiling used repo-wide
+
+
+def sublane_multiple(bits: int) -> int:
+    """Minimum efficient second-minor tile multiple for an operand width.
+
+    The TPU packs narrower dtypes deeper per sublane: float32 tiles are
+    (8, 128), bfloat16 (16, 128), int8 (32, 128).  TM below this multiple is
+    still *legal* (the kernel only requires TM % 8 == 0) but wastes sublanes.
+    """
+    return {32: MXU_SUBLANES, 16: 2 * MXU_SUBLANES, 8: 4 * MXU_SUBLANES}.get(
+        bits, MXU_SUBLANES
+    )
+
 
 @dataclasses.dataclass(frozen=True)
 class OpenGeMMConfig:
@@ -143,7 +165,7 @@ class OpenGeMMConfig:
     # -- TPU kernel specialization ---------------------------------------------
 
     def tpu_kernel_spec(
-        self, shape: GemmShape | None = None, *, vmem_budget: int = 96 * 1024 * 1024
+        self, shape: GemmShape | None = None, *, vmem_budget: int = VMEM_BUDGET_BYTES
     ) -> "TpuGemmSpec":
         """Scale the (Mu,Ku,Nu) design point to MXU-native block sizes.
 
@@ -187,10 +209,23 @@ class TpuGemmSpec:
 
     def __post_init__(self) -> None:
         # MXU alignment: lanes = 128, sublanes = 8.
-        if self.tn % 128 or self.tk % 128:
-            raise ValueError(f"tk/tn must be multiples of 128: {self}")
-        if self.tm % 8:
-            raise ValueError(f"tm must be a multiple of 8: {self}")
+        if self.tn % MXU_LANES or self.tk % MXU_LANES:
+            raise ValueError(f"tk/tn must be multiples of {MXU_LANES}: {self}")
+        if self.tm % MXU_SUBLANES:
+            raise ValueError(f"tm must be a multiple of {MXU_SUBLANES}: {self}")
+
+    def vmem_bytes(self, operand_bits: int = 8) -> int:
+        """Buffered A/B blocks plus the f32/i32 accumulator tile.
+
+        The buffering factor is `depth`: the pipelined kernel allocates
+        `depth` ring-buffer slots per operand (gemm_pipelined.py), and the
+        plain kernel's grid pipelining double-buffers (depth-2 lower bound).
+        """
+        bufs = max(2, self.depth)
+        return (
+            bufs * (self.tm * self.tk + self.tk * self.tn) * operand_bits // 8
+            + self.tm * self.tn * 4
+        )
 
     @property
     def grid_for(self):

@@ -1,0 +1,13 @@
+"""TPU hardware constants shared across the roofline and tuning models.
+
+Single source of truth (jax-free, so the analytic autotuner path never pays
+the jax import): `launch/mesh.py` re-exports these for the mesh-level
+roofline, `tuning/model.py` derives its cycle-model units from them.
+Retarget the chip here and every consumer moves together.
+"""
+
+# TPU v5e-class, per chip.
+PEAK_FLOPS_BF16 = 197e12      # bf16 FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (~per-axis usable)
+CLOCK_HZ = 940e6              # core clock used to convert cycles <-> seconds

@@ -4,7 +4,11 @@
   gemm_pipelined  explicit depth-D ring-buffer variant (D_stream knob)
   quant           int8 row quantization
   ops             jit'd public wrappers + backend dispatch
+  registry        named kernel factories (backend -> Pallas specialization)
   ref             pure-jnp oracles
+
+`tuned_gemm` dispatches through the tile autotuner (repro.tuning): the best
+known (TM, TK, TN) for the problem, searched once and cached.
 """
 
 from repro.kernels.ops import (
@@ -15,12 +19,29 @@ from repro.kernels.ops import (
     set_default_backend,
     get_default_backend,
 )
+from repro.kernels.registry import make_kernel, register_kernel, registered_kernels
+
+
+def tuned_gemm(a, b, **kwargs):
+    """C = A @ B with the autotuned tile spec (see repro.tuning).
+
+    Lazy wrapper: the tuning package (and its cache I/O) loads on first use,
+    so plain `gemm` callers never pay for it.
+    """
+    from repro.tuning import tuned_gemm as _tuned_gemm
+
+    return _tuned_gemm(a, b, **kwargs)
+
 
 __all__ = [
     "gemm",
+    "tuned_gemm",
     "gemm_int8_dequant",
     "linear",
     "quantize",
     "set_default_backend",
     "get_default_backend",
+    "make_kernel",
+    "register_kernel",
+    "registered_kernels",
 ]

@@ -10,6 +10,11 @@ paper's technique is a first-class feature of the framework, not a demo:
   backend="xla"        jnp.einsum — dry-run / baseline path
   backend="auto"       pallas on TPU, xla elsewhere
 
+Kernel variants resolve through `kernels/registry.py`; tile specs resolve,
+in order, from the explicit `spec=` argument, the autotuner (when
+`repro.tuning` is enabled — see `tuning.enable()` / REPRO_AUTOTUNE=1), or
+the config's fixed `tpu_kernel_spec` mapping.
+
 Ragged problems are padded to the tile grid, the TPU analogue of the paper's
 spatial-utilization padding: the padding fraction *is* (1 - SU).
 """
@@ -17,6 +22,7 @@ spatial-utilization padding: the padding fraction *is* (1 - SU).
 from __future__ import annotations
 
 import functools
+import sys
 from typing import Optional, Tuple
 
 import jax
@@ -25,8 +31,7 @@ import jax.numpy as jnp
 from repro.core.dataflow import GemmShape
 from repro.core.generator import CASE_STUDY, OpenGeMMConfig, TpuGemmSpec
 from repro.kernels import ref
-from repro.kernels.gemm import make_dequant_gemm, make_gemm
-from repro.kernels.gemm_pipelined import make_pipelined_gemm
+from repro.kernels.registry import make_kernel
 
 _DEFAULT_BACKEND = "auto"
 
@@ -57,6 +62,35 @@ def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
     return x
 
 
+def _dispatch_spec(
+    cfg: OpenGeMMConfig, shape: GemmShape, dtype, backend: str
+) -> TpuGemmSpec:
+    """Tile spec for a spec-less call: autotuned if tuning is enabled.
+
+    An explicitly passed non-default `config` is designer intent — its
+    `tpu_kernel_spec` mapping is honored verbatim and the tuner (whose
+    cache is keyed against the default design point) stays out of the way.
+
+    `repro.tuning` is only consulted if it is already imported (someone
+    called `tuning.enable()`) or requested via REPRO_AUTOTUNE — a plain
+    `gemm` call never pays the import, keeping the default path inert.
+    """
+    if cfg is not CASE_STUDY:
+        return cfg.tpu_kernel_spec(shape)
+    tuning = sys.modules.get("repro.tuning")
+    if tuning is None:
+        import os
+
+        # Same truthiness rule as tuning.env_truthy: "0"/"false"/"" disable.
+        if os.environ.get("REPRO_AUTOTUNE", "").strip().lower() not in (
+            "", "0", "false", "no", "off"
+        ):
+            import repro.tuning as tuning
+    if tuning is not None and tuning.is_enabled():
+        return tuning.tuned_spec(shape, dtype, backend=backend)
+    return cfg.tpu_kernel_spec(shape)
+
+
 def gemm(
     a: jax.Array,
     b: jax.Array,
@@ -75,14 +109,11 @@ def gemm(
     M, K = a.shape
     _, N = b.shape
     cfg = config or CASE_STUDY
-    spec = spec or cfg.tpu_kernel_spec(GemmShape(M, K, N))
+    spec = spec or _dispatch_spec(cfg, GemmShape(M, K, N), a.dtype, backend)
     ap, bp = _pad2(a, spec.tm, spec.tk), _pad2(b, spec.tk, spec.tn)
     interpret = backend == "interpret"
-    if backend == "pipelined":
-        k = make_pipelined_gemm(spec, interpret=interpret)
-    else:
-        k = make_gemm(spec, interpret=interpret)
-    out = k(ap, bp)
+    kernel_name = "pipelined" if backend == "pipelined" else "pallas"
+    out = make_kernel(kernel_name, spec, interpret=interpret)(ap, bp)
     return out[:M, :N]
 
 
@@ -101,11 +132,11 @@ def gemm_int8_dequant(
         return ref.gemm_dequant_ref(a_q, b_q, scale_a, scale_b)
     M, K = a_q.shape
     _, N = b_q.shape
-    spec = spec or CASE_STUDY.tpu_kernel_spec(GemmShape(M, K, N))
+    spec = spec or _dispatch_spec(CASE_STUDY, GemmShape(M, K, N), a_q.dtype, backend)
     ap, bp = _pad2(a_q, spec.tm, spec.tk), _pad2(b_q, spec.tk, spec.tn)
     sa = _pad2(scale_a, spec.tm, 1)
     sb = _pad2(scale_b, 1, spec.tn)
-    k = make_dequant_gemm(spec, interpret=(backend == "interpret"))
+    k = make_kernel("dequant", spec, interpret=(backend == "interpret"))
     return k(ap, bp, sa, sb)[:M, :N]
 
 

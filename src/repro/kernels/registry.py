@@ -1,0 +1,66 @@
+"""Kernel registry: named GeMM kernel factories, one per backend variant.
+
+The Chisel generator's elaboration table, in software: every entry maps a
+backend name to a factory ``factory(spec, *, interpret=False) -> gemm_fn``
+that specializes a Pallas kernel for one `TpuGemmSpec` design point.
+
+`ops.gemm` and `repro.tuning` dispatch through this table instead of
+hard-coding imports, so adding a kernel variant (a new dataflow, a fused
+epilogue, a future backend) is one `register_kernel` call — the autotuner
+and every caller pick it up without modification.
+
+Generated kernels are memoized per (name, spec, interpret): re-tracing the
+same specialization on every call would defeat jit caching upstream.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+from repro.core.generator import TpuGemmSpec
+from repro.kernels.gemm import make_dequant_gemm, make_gemm
+from repro.kernels.gemm_pipelined import make_pipelined_gemm
+
+KernelFactory = Callable[..., Callable]
+
+_REGISTRY: Dict[str, KernelFactory] = {}
+
+
+def register_kernel(name: str, factory: KernelFactory, *, overwrite: bool = False) -> None:
+    """Add a kernel variant.  `factory(spec, *, interpret=False) -> fn`."""
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"kernel {name!r} already registered")
+    _REGISTRY[name] = factory
+    _make_cached.cache_clear()
+
+
+def registered_kernels() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_kernel_factory(name: str) -> KernelFactory:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {registered_kernels()}"
+        ) from None
+
+
+@functools.lru_cache(maxsize=256)
+def _make_cached(name: str, spec: TpuGemmSpec, interpret: bool) -> Callable:
+    return _REGISTRY[name](spec, interpret=interpret)
+
+
+def make_kernel(name: str, spec: TpuGemmSpec, *, interpret: bool = False) -> Callable:
+    """Instantiate (or fetch the memoized) kernel `name` at design point `spec`."""
+    get_kernel_factory(name)  # raise the readable error before caching
+    return _make_cached(name, spec, interpret)
+
+
+# -- built-in variants -------------------------------------------------------
+
+register_kernel("pallas", make_gemm)
+register_kernel("pipelined", make_pipelined_gemm)
+register_kernel("dequant", make_dequant_gemm)

@@ -15,9 +15,8 @@ from __future__ import annotations
 import jax
 
 # TPU v5e-class hardware constants used by the roofline analysis.
-PEAK_FLOPS_BF16 = 197e12      # per chip
-HBM_BW = 819e9                # bytes/s per chip
-ICI_BW = 50e9                 # bytes/s per link (~per-axis usable)
+# Single source of truth: repro.core.hw (shared with the tile autotuner).
+from repro.core.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: F401
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -5,7 +5,14 @@ different lengths, get packed into a fixed decode batch, prefill fills the
 KV/SSM caches, and decode steps retire tokens for all active slots; finished
 slots are refilled from the queue (continuous batching).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --requests 8
+With ``--autotune`` the server pre-tunes the model's GeMM shapes before
+taking traffic: the tile autotuner (repro.tuning) searches (TM, TK, TN) per
+projection once, persists the winners, and every spec-less `ops.gemm` call
+dispatches through the cached result — no hand-picked tiles in the serving
+path.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --requests 8 \
+      --autotune
 """
 
 from __future__ import annotations
@@ -19,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.dataflow import GemmShape
 from repro.launch import steps as steps_lib
 from repro.models import model as M
 
@@ -57,15 +65,72 @@ class BatchedServer:
         return np.stack(outs, axis=1)  # (slots, steps)
 
 
+def serving_gemm_shapes(cfg, *, slots: int) -> List[GemmShape]:
+    """The per-step *dense-projection* GeMMs of a decode batch: the shapes
+    to pre-tune.
+
+    One decode step runs, per attention layer, the separate q/k/v and
+    output projections (models/attention.py: wq (d, hq*hd), wk/wv
+    (d, hkv*hd), wo (hq*hd, d)) and — for dense-FFN archs — the two FFN
+    matmuls over `slots` token rows, plus the vocab head.  MoE expert
+    matmuls (einsum over stacked expert weights) and SSM scans do not
+    route through spec-dispatched ops.gemm, so they are not warmed here.
+    """
+    d, ff, vocab = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    shapes = []
+    if cfg.family != "ssm":              # archs with attention layers
+        shapes += [
+            GemmShape(slots, d, hq * hd),    # q projection
+            GemmShape(slots, d, hkv * hd),   # k / v projections
+            GemmShape(slots, hq * hd, d),    # attention output projection
+        ]
+    if cfg.moe is None:                  # dense FFN (MoE experts run via einsum)
+        shapes += [
+            GemmShape(slots, d, ff),         # FFN up (and swiglu gate)
+            GemmShape(slots, ff, d),         # FFN down
+        ]
+    shapes.append(GemmShape(slots, d, vocab))  # LM head
+    # dedupe, preserving order
+    seen, out = set(), []
+    for s in shapes:
+        if s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+def autotune_for_serving(cfg, *, slots: int, mode: str = "analytic") -> None:
+    """Warm the tuner cache for this model's shapes and enable tuned dispatch."""
+    from repro import tuning
+
+    tuner = tuning.Autotuner(mode=mode)
+    tuning.set_tuner(tuner)
+    shapes = serving_gemm_shapes(cfg, slots=slots)
+    print(f"autotune[{mode}]: {len(shapes)} GeMM shapes for {cfg.name}")
+    for r, s in zip(tuner.warmup(shapes, dtype=cfg.dtype), shapes):
+        hit = "cache" if r.from_cache else r.source
+        print(f"  {s.M}x{s.K}x{s.N}: tile=({r.spec.tm},{r.spec.tk},{r.spec.tn}) "
+              f"[{hit}]")
+    tuning.enable()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b", choices=configs.list_archs())
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--autotune", action="store_true",
+                    help="pre-tune this model's GeMM tiles before serving")
+    ap.add_argument("--tune-mode", default="analytic",
+                    choices=["analytic", "wallclock"])
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch)
+    if args.autotune:
+        autotune_for_serving(cfg, slots=args.requests, mode=args.tune_mode)
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     server = BatchedServer(cfg, params, slots=args.requests,
                            max_seq=args.prompt_len + args.gen_len + 1)

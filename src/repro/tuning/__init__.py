@@ -1,0 +1,56 @@
+"""Tile autotuner: the OpenGeMM generator loop, closed in software.
+
+  candidates  - MXU-legal (TM, TK, TN) design space per (shape, dtype)
+  model       - analytic ranking via the core/simulator.py cycle model
+  cache       - JSON winner registry with an in-memory LRU front
+  autotuner   - search + cache orchestration, `tuned_gemm` entry point
+
+Quick use::
+
+    from repro.tuning import tuned_gemm
+    c = tuned_gemm(a, b)                      # best known tile, cached
+
+    from repro import tuning
+    tuning.enable()                           # spec-less ops.gemm calls
+    ...                                       # now dispatch through the tuner
+
+Set ``REPRO_AUTOTUNE=1`` to enable dispatch at import, and
+``REPRO_TUNE_CACHE=/path.json`` to relocate the winner registry.
+"""
+
+from repro.tuning.autotuner import (
+    Autotuner,
+    TuneResult,
+    disable,
+    enable,
+    get_tuner,
+    is_enabled,
+    set_tuner,
+    tuned_gemm,
+    tuned_spec,
+)
+from repro.tuning.cache import CacheEntry, TuneCache, cache_key, default_cache_path
+from repro.tuning.candidates import dtype_bits, enumerate_tiles
+from repro.tuning.model import TilePrediction, predict, predict_clocks, proxy_config
+
+__all__ = [
+    "Autotuner",
+    "TuneResult",
+    "TuneCache",
+    "CacheEntry",
+    "TilePrediction",
+    "cache_key",
+    "default_cache_path",
+    "dtype_bits",
+    "enumerate_tiles",
+    "predict",
+    "predict_clocks",
+    "proxy_config",
+    "enable",
+    "disable",
+    "is_enabled",
+    "get_tuner",
+    "set_tuner",
+    "tuned_gemm",
+    "tuned_spec",
+]

@@ -1,0 +1,169 @@
+"""Tuning cache: persisted winners, keyed by (shape, dtype, backend).
+
+Two layers, mirroring the accelerator's own configuration hierarchy:
+
+  * an in-memory LRU (the "CSR file": hot configs resolve in O(1) with no
+    I/O — this is the path `tuned_gemm` hits on every call after the first);
+  * an on-disk JSON registry (the "generator output": survives processes,
+    shareable between machines, human-readable for EXPERIMENTS.md dumps).
+
+Writes go through a temp-file rename so a crashed run never corrupts the
+registry; concurrent readers always see a complete JSON document.
+
+The default location is ``~/.cache/repro-opengemm/tunecache.json``,
+overridable with ``REPRO_TUNE_CACHE`` (useful for committing a tuned
+registry next to a deployment, or pointing tests at a tmpdir).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional
+
+from repro.core.dataflow import GemmShape
+from repro.core.generator import TpuGemmSpec
+
+_ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+def default_cache_path() -> str:
+    return os.environ.get(_ENV_VAR) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-opengemm", "tunecache.json"
+    )
+
+
+def cache_key(shape: GemmShape, dtype, backend: str) -> str:
+    name = getattr(dtype, "name", str(dtype))
+    return f"{shape.M}x{shape.K}x{shape.N}|{name}|{backend}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheEntry:
+    """One tuned winner: the spec plus provenance for auditability."""
+
+    spec: TpuGemmSpec
+    score: float              # predicted clocks (analytic) or seconds (wallclock)
+    source: str               # "analytic" | "wallclock"
+
+    def to_json(self) -> dict:
+        return {
+            "tm": self.spec.tm, "tk": self.spec.tk, "tn": self.spec.tn,
+            "depth": self.spec.depth, "int8": self.spec.int8,
+            "score": self.score, "source": self.source,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CacheEntry":
+        return cls(
+            spec=TpuGemmSpec(
+                tm=int(d["tm"]), tk=int(d["tk"]), tn=int(d["tn"]),
+                depth=int(d.get("depth", 2)), int8=bool(d.get("int8", True)),
+            ),
+            score=float(d["score"]),
+            source=str(d.get("source", "analytic")),
+        )
+
+
+class TuneCache:
+    """JSON-backed winner registry with an in-memory LRU front.
+
+    `persistent=False` makes the cache memory-only: nothing is read from or
+    written to disk (hermetic benchmarks / tests).
+    """
+
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        *,
+        lru_size: int = 256,
+        persistent: bool = True,
+    ):
+        self.path = path or default_cache_path()
+        self.lru_size = lru_size
+        self.persistent = persistent
+        self._lru: "OrderedDict[str, CacheEntry]" = OrderedDict()
+        self._disk: Dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        if persistent:
+            self._load()
+
+    # -- persistence ---------------------------------------------------------
+
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                self._disk = {str(k): v for k, v in data.items()}
+        except (OSError, ValueError):
+            self._disk = {}
+
+    def save(self) -> None:
+        if not self.persistent:
+            return
+        with self._lock:
+            snapshot = dict(self._disk)
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tunecache")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(snapshot, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- lookup / insert -----------------------------------------------------
+
+    def get(self, key: str) -> Optional[CacheEntry]:
+        with self._lock:
+            hit = self._lru.get(key)
+            if hit is not None:
+                self._lru.move_to_end(key)
+                self.hits += 1
+                return hit
+            raw = self._disk.get(key)
+            if raw is not None:
+                try:
+                    entry = CacheEntry.from_json(raw)
+                except (KeyError, ValueError, TypeError):
+                    self.misses += 1
+                    return None
+                self._insert_lru(key, entry)
+                self.hits += 1
+                return entry
+            self.misses += 1
+            return None
+
+    def put(self, key: str, entry: CacheEntry, *, persist: bool = True) -> None:
+        with self._lock:
+            self._insert_lru(key, entry)
+            self._disk[key] = entry.to_json()
+        if persist:
+            self.save()
+
+    def _insert_lru(self, key: str, entry: CacheEntry) -> None:
+        self._lru[key] = entry
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.lru_size:
+            self._lru.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._disk)
+
+    def dump(self) -> Dict[str, dict]:
+        """The on-disk registry as a dict (see EXPERIMENTS.md for reading it)."""
+        with self._lock:
+            return {k: dict(v) for k, v in sorted(self._disk.items())}

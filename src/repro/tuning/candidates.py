@@ -1,0 +1,116 @@
+"""Tile-shape candidate enumeration: the autotuner's design space.
+
+The Chisel generator elaborates one accelerator per (Mu, Ku, Nu); the TPU
+analogue elaborates one Pallas kernel per (TM, TK, TN) `TpuGemmSpec`.  This
+module enumerates every spec that is *legal* for a given problem:
+
+  * TN and TK are multiples of the 128 MXU lanes, TM of the 8 sublanes
+    (hard constraints from `TpuGemmSpec.__post_init__`);
+  * TM additionally respects the dtype sublane packing (8/16/32 for
+    f32/bf16/int8) so no candidate wastes sublanes by construction;
+  * the double-buffered A/B blocks plus the accumulator tile fit the VMEM
+    budget (`TpuGemmSpec.vmem_bytes`);
+  * no tile extends past the *padded* problem (a 512-wide TN for N=128 only
+    adds padding MACs, so it is pruned, not ranked).
+
+The default `tpu_kernel_spec` design point is always included, so the
+autotuner can only ever match or beat the hard-coded mapping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.dataflow import GemmShape
+from repro.core.generator import (
+    CASE_STUDY,
+    MXU_LANES,
+    OpenGeMMConfig,
+    TpuGemmSpec,
+    VMEM_BUDGET_BYTES,
+    sublane_multiple,
+)
+
+# Power-of-two sweep bounds; the per-problem aligned extents are added on top.
+_TM_SWEEP = (8, 16, 32, 64, 128, 256, 512)
+_TKN_SWEEP = (128, 256, 512)
+
+
+def dtype_bits(dtype) -> int:
+    """Operand width in bits for a jnp dtype / dtype name."""
+    name = getattr(dtype, "name", str(dtype))
+    if "int8" in name or "uint8" in name or "fp8" in name:
+        return 8
+    if "bfloat16" in name or "float16" in name:
+        return 16
+    return 32
+
+
+def _align_up(v: int, a: int) -> int:
+    return -(-v // a) * a
+
+
+def enumerate_tiles(
+    shape: GemmShape,
+    dtype="int8",
+    *,
+    depth=None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    config: Optional[OpenGeMMConfig] = None,
+    max_candidates: Optional[int] = None,
+) -> List[TpuGemmSpec]:
+    """All legal (TM, TK, TN) specs for `shape`/`dtype`, default spec included.
+
+    `depth` is the paper's D_stream knob: an int, a sequence of ints to sweep
+    pipeline depths as part of the search (the Fig. 5 depth axis — meaningful
+    for the "pipelined" ring-buffer kernel), or None for the config's
+    D_stream.  Returned in a deterministic order (ascending tile volume, then
+    lexical), so analytic ranking over this list is reproducible run to run.
+    """
+    bits = dtype_bits(dtype)
+    int8 = bits == 8
+    sub = sublane_multiple(bits)
+    cfg = config or CASE_STUDY
+    if depth is None:
+        depth = cfg.D_stream
+    depths = (depth,) if isinstance(depth, int) else tuple(depth)
+
+    # Candidate extents per dim: the power-of-two sweep, clipped to the padded
+    # problem, plus the exact aligned extent (captures e.g. TM=200 for M=197).
+    tm_cap = _align_up(shape.M, sub)
+    tk_cap = _align_up(shape.K, MXU_LANES)
+    tn_cap = _align_up(shape.N, MXU_LANES)
+    tms = sorted({min(v, tm_cap) for v in _TM_SWEEP if v % sub == 0} | {min(512, tm_cap)})
+    tks = sorted({min(v, tk_cap) for v in _TKN_SWEEP} | {min(512, tk_cap)})
+    tns = sorted({min(v, tn_cap) for v in _TKN_SWEEP} | {min(512, tn_cap)})
+
+    seen = set()
+    out: List[TpuGemmSpec] = []
+    # The default design point rides along at its native depth (dtype flag
+    # normalized: tpu_kernel_spec always reports CASE_STUDY's int8), so the
+    # search can only match or beat the hard-coded mapping.
+    default = dataclasses.replace(
+        cfg.tpu_kernel_spec(shape, vmem_budget=vmem_budget), int8=int8
+    )
+    for spec in [default] + [
+        TpuGemmSpec(tm=tm, tk=tk, tn=tn, depth=d, int8=int8)
+        for tm in tms
+        for tk in tks
+        for tn in tns
+        for d in depths
+    ]:
+        key = (spec.tm, spec.tk, spec.tn, spec.depth)
+        if key in seen or spec.vmem_bytes(bits) > vmem_budget:
+            continue
+        seen.add(key)
+        out.append(spec)
+
+    out.sort(key=lambda s: (s.tm * s.tk * s.tn, s.tm, s.tk, s.tn, s.depth))
+    if max_candidates is not None and len(out) > max_candidates:
+        # Keep the default in the pruned set: it is the baseline to beat.
+        keep = out[:max_candidates]
+        if default not in keep:
+            keep[-1] = default
+        out = keep
+    return out

@@ -1,0 +1,107 @@
+"""Analytic tile ranking: the paper's cycle model re-targeted at the TPU.
+
+`core/simulator.py` models a generated OpenGeMM instance in closed form:
+configuration + pipeline fill + compute + streamer stalls, per call.  The
+Pallas kernel has exactly the same structure — the DMA engine is the operand
+streamer, VMEM the scratchpad, the MXU the MAC array, and the grid's K-inner
+schedule the output-stationary tile loop — so the same model ranks TPU tile
+shapes if we re-express its constants in TPU units:
+
+  * one simulator "cycle" := one MXU pass over a (TM, TK, TN) tile
+    (`pass_clocks` real clocks, from the chip's peak MACs/clock);
+  * streamer bandwidth := HBM bytes/clock x pass_clocks, folded into the
+    config's `R_mem x P_word` port model;
+  * the CSR routine := kernel launch/dispatch overhead, in pass units;
+  * `D_stream` := the Pallas pipeline depth (2 for grid double-buffering,
+    deeper for gemm_pipelined's explicit ring buffer).
+
+Spatial utilization (padding waste) is captured automatically: the simulator
+tiles the problem with `ceil`, so an oversized TN pays its padded passes.
+
+This is the autotuner's *fast path*: ranking ~100 candidates is a few
+milliseconds of arithmetic and needs no TPU.  Absolute clock counts are
+roofline-grade estimates; only the *ordering* is consumed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.dataflow import GemmShape
+from repro.core.generator import OpenGeMMConfig, TpuGemmSpec
+from repro.core.simulator import OpenGeMMSimulator
+from repro.tuning.candidates import dtype_bits
+
+# TPU hardware constants: shared with launch/mesh.py via core/hw.py.
+from repro.core.hw import CLOCK_HZ, HBM_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+LAUNCH_CLOCKS = 5000          # kernel dispatch overhead per pallas_call
+
+_MACS_PER_CLOCK_BF16 = PEAK_FLOPS_BF16 / (2 * CLOCK_HZ)
+_HBM_BYTES_PER_CLOCK = HBM_BW / CLOCK_HZ
+
+
+def macs_per_clock(bits: int) -> float:
+    """Peak MACs/clock by operand width: int8 runs 2x bf16, f32 half."""
+    return _MACS_PER_CLOCK_BF16 * {8: 2.0, 16: 1.0, 32: 0.5}[bits]
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePrediction:
+    """Model-predicted performance of one (spec, shape, dtype) point."""
+
+    spec: TpuGemmSpec
+    clocks: float            # predicted TPU clocks for one GeMM call
+    utilization: float       # useful MACs / (clocks * peak MACs/clock)
+
+    @property
+    def time_s(self) -> float:
+        return self.clocks / CLOCK_HZ
+
+    def gops(self, shape: GemmShape) -> float:
+        return 2 * shape.macs / self.time_s / 1e9
+
+
+def proxy_config(spec: TpuGemmSpec, dtype="int8") -> OpenGeMMConfig:
+    """An `OpenGeMMConfig` whose cycle model, run in tile-pass units,
+    describes the Pallas kernel generated from `spec`."""
+    bits = dtype_bits(dtype)
+    pass_clocks = max(1.0, spec.tm * spec.tk * spec.tn / macs_per_clock(bits))
+    bw_bits = max(64, int(_HBM_BYTES_PER_CLOCK * pass_clocks) * 8)
+    ports = max(1, bw_bits // 64)
+    return OpenGeMMConfig(
+        Mu=spec.tm, Ku=spec.tk, Nu=spec.tn,
+        P_A=bits, P_B=bits, P_C=32,
+        D_stream=max(2, spec.depth),
+        R_mem=ports, W_mem=ports, P_word=64,
+        # CPL / pre-fetch / strided access are all "on" on TPU: dispatch of
+        # call i+1 overlaps call i, the grid pipeline prefetches, and VMEM
+        # is conflict-free.
+        cfg_preload=True, input_prefetch=True, strided_access=True,
+        csr_cycles=max(1, round(LAUNCH_CLOCKS / pass_clocks)),
+        launch_cycles=1,
+        spm_latency=2,
+    )
+
+
+def predict(
+    spec: TpuGemmSpec,
+    shape: GemmShape,
+    dtype="int8",
+    *,
+    first_call: bool = True,
+    config: Optional[OpenGeMMConfig] = None,
+) -> TilePrediction:
+    """Predicted clocks/utilization for one `gemm(a, b)` call at `spec`."""
+    bits = dtype_bits(dtype)
+    cfg = config or proxy_config(spec, dtype)
+    pass_clocks = max(1.0, spec.tm * spec.tk * spec.tn / macs_per_clock(bits))
+    timing = OpenGeMMSimulator(cfg).simulate_call(shape, first_call=first_call)
+    clocks = timing.total_cycles * pass_clocks
+    util = shape.macs / (clocks * macs_per_clock(bits))
+    return TilePrediction(spec=spec, clocks=clocks, utilization=util)
+
+
+def predict_clocks(spec: TpuGemmSpec, shape: GemmShape, dtype="int8") -> float:
+    return predict(spec, shape, dtype).clocks

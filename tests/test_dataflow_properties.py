@@ -1,12 +1,15 @@
-"""Deterministic tests of the dataflow/tiling math.
+"""Property-based tests of the dataflow/tiling math.
 
-Always runs (no hypothesis).  Randomized-input versions of the same
-properties live in test_dataflow_properties.py.
+Optional module: requires `hypothesis` (requirements-dev.txt).  The
+deterministic equivalents in test_dataflow.py always run.
 """
 
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dataflow import (
     Dataflow,
@@ -20,17 +23,16 @@ from repro.core.dataflow import (
     roofline_time_s,
 )
 
-SHAPES = [(1, 1, 1), (8, 8, 8), (7, 9, 5), (64, 8, 200), (197, 768, 512), (512, 512, 512)]
-ARRAYS = [(8, 8, 8), (1, 4, 16), (16, 2, 8)]
+dims = st.integers(min_value=1, max_value=512)
+arr = st.sampled_from([1, 2, 4, 8, 16])
 
 
-@pytest.mark.parametrize("mkn", SHAPES)
-@pytest.mark.parametrize("arr", ARRAYS)
-def test_spatial_utilization_bounds(mkn, arr):
-    M, K, N = mkn
-    Mu, Ku, Nu = arr
+@given(M=dims, K=dims, N=dims, Mu=arr, Ku=arr, Nu=arr)
+@settings(max_examples=200, deadline=None)
+def test_spatial_utilization_bounds(M, K, N, Mu, Ku, Nu):
     df = Dataflow(spatial=SpatialUnrolling(Mu, Ku, Nu))
-    su = df.spatial_utilization(GemmShape(M, K, N))
+    g = GemmShape(M, K, N)
+    su = df.spatial_utilization(g)
     assert 0 < su <= 1
     # SU == 1 iff every dim is a multiple of its unrolling
     if M % Mu == 0 and K % Ku == 0 and N % Nu == 0:
@@ -39,10 +41,11 @@ def test_spatial_utilization_bounds(mkn, arr):
         assert su < 1.0
 
 
-@pytest.mark.parametrize("mkn", SHAPES)
-def test_padded_shape_consistency(mkn):
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_padded_shape_consistency(M, K, N):
     sp = SpatialUnrolling()
-    g = GemmShape(*mkn)
+    g = GemmShape(M, K, N)
     p = sp.padded_shape(g)
     assert p.M % sp.Mu == 0 and p.K % sp.Ku == 0 and p.N % sp.Nu == 0
     assert p.M - g.M < sp.Mu and p.K - g.K < sp.Ku and p.N - g.N < sp.Nu
@@ -50,12 +53,10 @@ def test_padded_shape_consistency(mkn):
     assert (m * sp.Mu, k * sp.Ku, n * sp.Nu) == (p.M, p.K, p.N)
 
 
-@pytest.mark.parametrize("counts", [(1, 1, 1), (2, 3, 2), (4, 1, 5), (3, 3, 3)])
-@pytest.mark.parametrize(
-    "order", [OUTPUT_STATIONARY, WEIGHT_STATIONARY, ("n1", "m1", "k1")]
-)
-def test_temporal_iterate_covers_all_tiles(counts, order):
-    m, k, n = counts
+@given(m=st.integers(1, 6), k=st.integers(1, 6), n=st.integers(1, 6),
+       order=st.permutations(["m1", "k1", "n1"]))
+@settings(max_examples=50, deadline=None)
+def test_temporal_iterate_covers_all_tiles(m, k, n, order):
     t = TemporalUnrolling(tuple(order))
     seen = list(t.iterate((m, k, n)))
     assert len(seen) == m * k * n
@@ -71,27 +72,32 @@ def test_output_stationary_innermost_k():
     assert it[0][:1] + it[0][2:] == it[1][:1] + it[1][2:]
 
 
-@pytest.mark.parametrize("mkn", SHAPES)
-def test_choose_loop_order_prefers_output_stationary(mkn):
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_choose_loop_order_prefers_output_stationary(M, K, N):
     # Paper Sec 2.3: partial-sum width (32b) > operand width (8b) => OS.
-    t = choose_loop_order(GemmShape(*mkn), SpatialUnrolling())
+    t = choose_loop_order(GemmShape(M, K, N), SpatialUnrolling())
     assert t.order == OUTPUT_STATIONARY
 
 
-@pytest.mark.parametrize("mkn", SHAPES)
-def test_roofline_terms_positive_and_scaling(mkn):
-    g = GemmShape(*mkn)
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_roofline_terms_positive_and_scaling(M, K, N):
+    g = GemmShape(M, K, N)
     c, m = roofline_time_s(g, peak_flops=1e12, mem_bw=1e11)
     assert c > 0 and m > 0
     c2, m2 = roofline_time_s(g, peak_flops=2e12, mem_bw=2e11)
     assert math.isclose(c / c2, 2.0) and math.isclose(m / m2, 2.0)
-    assert arithmetic_intensity(g) > 0
+    ai = arithmetic_intensity(g)
+    assert math.isclose(ai, (c * 1e12) / (m * 1e11) * (1e11 / 1e12) * (1e12 / 1e11), rel_tol=1)
+    assert ai > 0
 
 
-@pytest.mark.parametrize("mkn", SHAPES)
-def test_overall_equals_spatial_times_temporal(mkn):
+@given(M=dims, K=dims, N=dims)
+@settings(max_examples=100, deadline=None)
+def test_overall_equals_spatial_times_temporal(M, K, N):
     df = Dataflow()
-    g = GemmShape(*mkn)
+    g = GemmShape(M, K, N)
     compute = df.compute_cycles(g)
     total = compute + 137  # arbitrary stall cycles
     su = df.spatial_utilization(g)

@@ -1,0 +1,60 @@
+"""Property-based simulator invariants.
+
+Optional module: requires `hypothesis` (requirements-dev.txt).  The
+deterministic invariants and reproduction-band checks live in
+test_simulator.py and always run.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.dataflow import GemmShape
+from repro.core.simulator import OpenGeMMSimulator, ablation_architectures
+
+dim8 = st.integers(1, 32).map(lambda i: 8 * i)
+
+
+@given(M=dim8, K=dim8, N=dim8)
+@settings(max_examples=60, deadline=None)
+def test_utilization_bounded(M, K, N):
+    sim = OpenGeMMSimulator()
+    u = sim.utilization(GemmShape(M, K, N), repeats=10)
+    assert 0 < u <= 1
+
+
+@given(M=dim8, K=dim8, N=dim8)
+@settings(max_examples=40, deadline=None)
+def test_mechanisms_monotone(M, K, N):
+    """Enabling each mechanism never hurts utilization materially.
+
+    (Exactly at degenerate single-K-tile workloads, pre-fetch adds a few fill
+    cycles with nothing to hide — the paper's Fig. 5 whiskers show the same
+    overlap at the bottom — so the property holds to 2%.)
+    """
+    g = GemmShape(M, K, N)
+    archs = ablation_architectures()
+    u = {k: OpenGeMMSimulator(c).utilization(g, repeats=10) for k, c in archs.items()}
+    tol = lambda x: x * 1.02 + 1e-9
+    assert u["arch1_baseline"] <= tol(u["arch2_cpl"])
+    assert u["arch2_cpl"] <= tol(u["arch3_cpl_buf2"])
+    assert u["arch3_cpl_buf2"] <= tol(u["arch4_all_buf2"])
+    assert u["arch4_all_buf2"] <= tol(u["arch4_all_buf3"])
+    assert u["arch4_all_buf3"] <= tol(u["arch4_all_buf4"])
+
+
+@given(M=dim8, K=dim8, N=dim8, reps=st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_timing_decomposition(M, K, N, reps):
+    sim = OpenGeMMSimulator()
+    ts = sim.simulate_sequence([GemmShape(M, K, N)] * reps)
+    for t in ts:
+        assert t.total_cycles == (
+            t.config_cycles + t.fill_cycles + t.compute_cycles
+            + t.input_stall_cycles + t.output_stall_cycles
+        )
+        assert t.compute_cycles >= 1
+    # CPL: later calls pay less config than the first
+    if reps > 1:
+        assert ts[1].config_cycles <= ts[0].config_cycles
