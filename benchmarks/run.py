@@ -15,7 +15,14 @@ import time
 
 
 def main() -> None:
-    from benchmarks import fig5_ablation, fig7_gemmini, kernel_bench, table2_dnn, table3_efficiency
+    from benchmarks import (
+        fig5_ablation,
+        fig7_gemmini,
+        kernel_bench,
+        serving_bench,
+        table2_dnn,
+        table3_efficiency,
+    )
 
     modules = [
         ("fig5", fig5_ablation),
@@ -23,6 +30,7 @@ def main() -> None:
         ("fig7", fig7_gemmini),
         ("table3", table3_efficiency),
         ("kernel", kernel_bench),
+        ("serving", serving_bench),
     ]
     print("name,value,derived")
     ok = True

@@ -45,6 +45,7 @@ class CallTiming:
     input_stall_cycles: int     # array idle waiting on operand streamers
     output_stall_cycles: int    # array idle waiting on write-back
     total_cycles: int
+    padded_shape: GemmShape     # shape rounded up to the (Mu, Ku, Nu) tiles
 
     @property
     def busy_cycles(self) -> int:
@@ -56,8 +57,14 @@ class CallTiming:
 
     @property
     def spatial_utilization(self) -> float:
-        padded = self.shape  # placeholder; SU computed by simulator
-        return 1.0
+        """SU = useful MACs / MACs issued on the tile-padded problem; < 1
+        whenever M, K or N is not a multiple of the array dims (edge tiles
+        run with part of the array idle)."""
+        return self.shape.macs / self.padded_shape.macs
+
+    @property
+    def overall_utilization(self) -> float:
+        return self.spatial_utilization * self.temporal_utilization
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +143,7 @@ class OpenGeMMSimulator:
             input_stall_cycles=input_stall,
             output_stall_cycles=output_stall,
             total_cycles=total,
+            padded_shape=self.spatial.padded_shape(shape),
         )
 
     # -- call sequences ------------------------------------------------------
@@ -154,6 +162,11 @@ class OpenGeMMSimulator:
         timings = self.simulate_sequence(shapes)
         pairs = [(t.shape, t.total_cycles) for t in timings]
         su, tu, ou, total = aggregate_utilization(self.df, pairs)
+        # Per-call SU must reproduce the MAC-weighted aggregate: the same
+        # padding arithmetic through two code paths (CallTiming vs dataflow).
+        per_call_su = (sum(t.shape.macs for t in timings)
+                       / sum(t.padded_shape.macs for t in timings))
+        assert abs(per_call_su - su) < 1e-12, (per_call_su, su)
         return WorkloadReport(
             su=su,
             tu=tu,

@@ -1,18 +1,17 @@
-"""Serving launcher: batched request decoding with continuous batching.
+"""Serving launcher: thin CLI over the serving engine (repro.serving).
 
-A minimal production-shaped server loop: requests arrive with prompts of
-different lengths, get packed into a fixed decode batch, prefill fills the
-KV/SSM caches, and decode steps retire tokens for all active slots; finished
-slots are refilled from the queue (continuous batching).
-
-With ``--autotune`` the server pre-tunes the model's GeMM shapes before
-taking traffic: the tile autotuner (repro.tuning) searches (TM, TK, TN) per
-projection once, persists the winners, and every spec-less `ops.gemm` call
-dispatches through the cached result — no hand-picked tiles in the serving
-path.
+The engine maps the paper's three utilization mechanisms onto the request
+path — warmup (autotune + AOT compile) as configuration pre-loading, chunked
+prefill interleaved with decode as input pre-fetching with output buffering,
+and the paged KV cache as programmable strided memory access.  See
+EXPERIMENTS.md §Serving for the mechanism table and measured speedups.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --requests 8 \
-      --autotune
+      --autotune --compare-prefill
+
+``--compare-prefill`` additionally times the legacy token-by-token prefill
+loop (decode steps over a padded batch) against the engine's chunked prefill
+on the same prompts and prints the wall-clock speedup.
 """
 
 from __future__ import annotations
@@ -26,131 +25,168 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.dataflow import GemmShape
 from repro.launch import steps as steps_lib
 from repro.models import model as M
+from repro.serving.engine import (  # re-exported for back-compat
+    Engine,
+    autotune_for_serving,
+    serving_gemm_shapes,
+)
+
+__all__ = ["Engine", "autotune_for_serving", "serving_gemm_shapes",
+           "token_by_token_prefill", "main"]
 
 
-class BatchedServer:
-    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256):
-        self.cfg, self.params = cfg, params
-        self.slots, self.max_seq = slots, max_seq
-        self.serve_step = jax.jit(steps_lib.make_serve_step(cfg))
-        self.state = M.init_decode_state(params, cfg, slots, max_seq)
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
-
-    def prefill_prompts(self, prompts: List[np.ndarray]):
-        """Feed prompts token-by-token through decode (cache warmup)."""
-        assert len(prompts) <= self.slots
-        maxlen = max(len(p) for p in prompts)
-        padded = np.zeros((self.slots, maxlen), np.int32)
-        for i, p in enumerate(prompts):
-            padded[i, :len(p)] = p
-        last = None
-        for t in range(maxlen):
-            last, self.state = self.serve_step(
-                self.params, self.state, jnp.asarray(padded[:, t:t + 1])
-            )
-        return last
-
-    def decode(self, steps: int, greedy: bool = True):
-        outs = []
-        logits, state = None, self.state
-        tok = self.tokens
-        for _ in range(steps):
-            logits, state = self.serve_step(self.params, state, tok)
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            outs.append(np.asarray(tok[:, 0]))
-        self.state = state
-        return np.stack(outs, axis=1)  # (slots, steps)
+def warm_token_by_token(cfg, params, slots: int, max_seq: int):
+    """Compile the baseline's decode step and build its initial state
+    *before* any timed region — the same footing the engine gets from
+    Engine.warmup().  Returns (jitted step, initial decode state) to pass
+    into token_by_token_prefill."""
+    serve_step = jax.jit(steps_lib.make_serve_step(cfg))
+    state = M.init_decode_state(params, cfg, slots, max_seq)
+    out, _ = serve_step(params, state, jnp.zeros((slots, 1), jnp.int32))
+    jax.block_until_ready(out)
+    return serve_step, state
 
 
-def serving_gemm_shapes(cfg, *, slots: int) -> List[GemmShape]:
-    """The per-step *dense-projection* GeMMs of a decode batch: the shapes
-    to pre-tune.
+def token_by_token_prefill(cfg, params, prompts: List[np.ndarray], *,
+                           max_seq: int, warmed=None):
+    """The pre-engine prefill path, kept as the comparison baseline: pad all
+    prompts to the batch max and feed them through the decode step one token
+    at a time (short prompts burn dead steps on their padding positions).
 
-    One decode step runs, per attention layer, the separate q/k/v and
-    output projections (models/attention.py: wq (d, hq*hd), wk/wv
-    (d, hkv*hd), wo (hq*hd, d)) and — for dense-FFN archs — the two FFN
-    matmuls over `slots` token rows, plus the vocab head.  MoE expert
-    matmuls (einsum over stacked expert weights) and SSM scans do not
-    route through spec-dispatched ops.gemm, so they are not warmed here.
+    Pass `warmed` from warm_token_by_token() when timing this, so the
+    measurement is steady-state dispatch — not the jit trace+compile or the
+    dense cache allocation.  Returns (last logits, state, step call count).
     """
-    d, ff, vocab = cfg.d_model, cfg.d_ff, cfg.vocab
-    hd = cfg.resolved_head_dim
-    hq, hkv = cfg.n_heads, cfg.n_kv_heads
-    shapes = []
-    if cfg.family != "ssm":              # archs with attention layers
-        shapes += [
-            GemmShape(slots, d, hq * hd),    # q projection
-            GemmShape(slots, d, hkv * hd),   # k / v projections
-            GemmShape(slots, hq * hd, d),    # attention output projection
-        ]
-    if cfg.moe is None:                  # dense FFN (MoE experts run via einsum)
-        shapes += [
-            GemmShape(slots, d, ff),         # FFN up (and swiglu gate)
-            GemmShape(slots, ff, d),         # FFN down
-        ]
-    shapes.append(GemmShape(slots, d, vocab))  # LM head
-    # dedupe, preserving order
-    seen, out = set(), []
-    for s in shapes:
-        if s not in seen:
-            seen.add(s)
-            out.append(s)
-    return out
+    slots = len(prompts)
+    if warmed is None:
+        warmed = warm_token_by_token(cfg, params, slots, max_seq)
+    serve_step, state = warmed
+    maxlen = max(len(p) for p in prompts)
+    padded = np.zeros((slots, maxlen), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+    last = None
+    for t in range(maxlen):
+        last, state = serve_step(params, state, jnp.asarray(padded[:, t:t + 1]))
+    jax.block_until_ready(last)
+    return last, state, maxlen
 
 
-def autotune_for_serving(cfg, *, slots: int, mode: str = "analytic") -> None:
-    """Warm the tuner cache for this model's shapes and enable tuned dispatch."""
-    from repro import tuning
+def compare_prefill(cfg, params, prompts: List[np.ndarray], *, slots: int,
+                    max_seq: int, block_size: int = 16, num_blocks=None,
+                    max_chunk: int = 64, iters: int = 3):
+    """Time legacy token-by-token prefill vs the engine's chunked prefill on
+    the same prompts; returns (t_legacy_s, t_chunked_s).
 
-    tuner = tuning.Autotuner(mode=mode)
-    tuning.set_tuner(tuner)
-    shapes = serving_gemm_shapes(cfg, slots=slots)
-    print(f"autotune[{mode}]: {len(shapes)} GeMM shapes for {cfg.name}")
-    for r, s in zip(tuner.warmup(shapes, dtype=cfg.dtype), shapes):
-        hit = "cache" if r.from_cache else r.source
-        print(f"  {s.M}x{s.K}x{s.N}: tile=({r.spec.tm},{r.spec.tk},{r.spec.tn}) "
-              f"[{hit}]")
-    tuning.enable()
+    Both paths are pre-compiled (warm_token_by_token / Engine.warmup) and
+    the iterations *interleave* legacy/chunked runs, each side reported as
+    its best-of-`iters` — so shared-host load spikes hit both paths alike
+    and the ratio measures steady-state step-count/batching effects.
+    Engine iterations after the first refill previously-used slots —
+    steady-state serving, slot resets included.  The one comparison harness
+    behind both the ``--compare-prefill`` CLI flag and
+    benchmarks/serving_bench.py.
+    """
+    if params is None:
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+    warmed = warm_token_by_token(cfg, params, slots, max_seq)
+    eng = Engine(cfg, params=params, slots=slots, max_seq=max_seq,
+                 block_size=block_size, num_blocks=num_blocks,
+                 max_chunk=max_chunk)
+    eng.warmup()
+
+    def legacy():
+        token_by_token_prefill(cfg, params, prompts[:slots],
+                               max_seq=max_seq, warmed=warmed)
+
+    def chunked():
+        # max_new=1: the first token falls out of the final chunk, so each
+        # run is pure prefill.
+        for p in prompts[:slots]:
+            eng.submit(p, max_new=1)
+        eng.run()
+
+    t_legacy, t_chunked = float("inf"), float("inf")
+    for _ in range(iters):
+        t_legacy = min(t_legacy, _timed(legacy))
+        t_chunked = min(t_chunked, _timed(chunked))
+    return t_legacy, t_chunked
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b", choices=configs.list_archs())
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode batch slots (default: --requests)")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=64,
+                    help="max prefill chunk (power-of-two buckets)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV cache block size in tokens")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="KV pool blocks (default: worst-case for --slots)")
     ap.add_argument("--autotune", action="store_true",
                     help="pre-tune this model's GeMM tiles before serving")
     ap.add_argument("--tune-mode", default="analytic",
                     choices=["analytic", "wallclock"])
+    ap.add_argument("--compare-prefill", action="store_true",
+                    help="time legacy token-by-token prefill vs the engine")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch)
-    if args.autotune:
-        autotune_for_serving(cfg, slots=args.requests, mode=args.tune_mode)
-    params = M.init_model(jax.random.PRNGKey(0), cfg)
-    server = BatchedServer(cfg, params, slots=args.requests,
-                           max_seq=args.prompt_len + args.gen_len + 1)
+    slots = args.slots or args.requests
+    max_seq = args.prompt_len + args.gen_len + 1
+    eng = Engine(
+        cfg, slots=slots, max_seq=max_seq,
+        block_size=args.block_size,
+        num_blocks=args.kv_blocks or None,
+        max_chunk=args.chunk,
+        autotune=args.autotune, tune_mode=args.tune_mode,
+        verbose=True,
+    )
+    t0 = time.time()
+    eng.warmup()
+    t_warm = time.time() - t0
 
     rng = np.random.default_rng(0)
     prompts = [
         rng.integers(0, cfg.vocab, size=rng.integers(4, args.prompt_len + 1))
         for _ in range(args.requests)
     ]
+    for p in prompts:
+        eng.submit(p, max_new=args.gen_len)
     t0 = time.time()
-    server.prefill_prompts(prompts)
-    t_pre = time.time() - t0
-    t0 = time.time()
-    gen = server.decode(args.gen_len)
-    t_dec = time.time() - t0
-    tps = args.requests * args.gen_len / t_dec
-    print(f"arch={cfg.name} slots={args.requests} "
-          f"prefill {t_pre*1e3:.0f}ms decode {t_dec*1e3:.0f}ms "
-          f"({tps:.1f} tok/s aggregate)")
+    results = eng.run()
+    t_serve = time.time() - t0
+
+    gen = np.stack([results[rid] for rid in sorted(results)])
+    pool_tokens = (eng.num_blocks - 1) * eng.block_size
+    dense_tokens = slots * max_seq
+    print(f"arch={cfg.name} slots={slots} warmup {t_warm*1e3:.0f}ms "
+          f"serve {t_serve*1e3:.0f}ms")
+    print(f"engine: {eng.metrics.summary()}")
+    print(f"kv pool: {eng.num_blocks - 1} blocks x {eng.block_size} tokens "
+          f"= {pool_tokens} tokens shared "
+          f"(dense would pin {dense_tokens} = slots x max_seq per layer)")
     print("sample continuations:", gen[:2, :8].tolist())
+
+    if args.compare_prefill:
+        t_legacy, t_chunked = compare_prefill(
+            cfg, eng.params, prompts, slots=slots, max_seq=max_seq,
+            block_size=args.block_size, num_blocks=args.kv_blocks or None,
+            max_chunk=args.chunk)
+        print(f"prefill: token-by-token {t_legacy*1e3:.0f}ms vs chunked "
+              f"{t_chunked*1e3:.0f}ms -> {t_legacy / t_chunked:.1f}x speedup")
     return gen
 
 

@@ -57,6 +57,28 @@ def make_serve_step(cfg: ArchConfig):
     return serve_step
 
 
+def make_paged_serve_step(cfg: ArchConfig):
+    """Decode step over the paged KV cache: every slot at its own length;
+    `active` masks slots that are idle or mid-prefill this step."""
+
+    def paged_serve_step(params, state: M.PagedDecodeState, tokens, active):
+        return M.paged_decode_step(params, cfg, state, tokens, active)
+
+    return paged_serve_step
+
+
+def make_prefill_chunk_step(cfg: ArchConfig):
+    """Multi-token prefill: advance one slot by a (1, C) chunk of prompt.
+
+    The same python callable serves every chunk size C — jit (or the
+    engine's AOT bucket compiles) specializes per shape."""
+
+    def prefill_chunk_step(params, state: M.PagedDecodeState, tokens, slot):
+        return M.prefill_chunk(params, cfg, state, tokens, slot)
+
+    return prefill_chunk_step
+
+
 # ---------------------------------------------------------------------------
 # ShapeDtypeStruct inputs per (arch x shape) cell — no device allocation.
 # ---------------------------------------------------------------------------

@@ -202,7 +202,12 @@ def decode_attention(
     window: Optional[int] = None,
     prefix_len: int = 0,
 ) -> jax.Array:
-    """Single-query attention over the whole cache, no KV-block scan.
+    """Query-over-whole-cache attention, no KV-block scan.
+
+    `index` is the position of the first query token — a scalar (all slots
+    at the same position, classic lock-step decode) or a (B,) vector (paged
+    serving: every slot at its own length).  Sq may be > 1 (chunked prefill:
+    query t sits at position index + t and attends causally up to itself).
 
     With the cache sequence-sharded on the model axis, the score einsum and
     the weighted sum stay fully local per shard; only the softmax statistics
@@ -217,13 +222,17 @@ def decode_attention(
     s = jnp.einsum(
         "bqhgd,bkhd->bhgqk", qf, k, preferred_element_type=jnp.float32
     )  # (B, Hkv, G, Sq, Skv)
+    idx = jnp.asarray(index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (B,))
+    qpos = idx[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]  # (B, Sq)
     kpos = jnp.arange(Skv)
-    mask = kpos[None, :] <= index  # (1, Skv) — past tokens only
+    mask = kpos[None, None, :] <= qpos[..., None]  # (B, Sq, Skv) — past only
     if window is not None:
-        mask &= (index - kpos[None, :]) < window
+        mask &= (qpos[..., None] - kpos[None, None, :]) < window
     if prefix_len:
-        mask |= (kpos[None, :] < prefix_len)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask |= (kpos < prefix_len)[None, None, :]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
     p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     out = jnp.einsum(
         "bhgqk,bkhd->bqhgd", p_attn, v, preferred_element_type=jnp.float32
@@ -243,22 +252,35 @@ def attention(
     kv_src: Optional[jax.Array] = None,
     cache: Optional[KVCache] = None,
     cache_index: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,
 ):
     """Full attention sublayer.  Returns (out, new_cache).
 
     Prefill / training: cache is None -> blockwise attention over x itself
-    (or kv_src for cross-attention).  Decode: cache holds (B, S_max, Hkv, D);
-    x is (B, 1, d) and cache_index the write position.
+    (or kv_src for cross-attention).  Dense decode: cache holds
+    (B, S_max, Hkv, D); x is (B, 1, d) and cache_index the scalar write
+    position.  Paged decode/prefill: cache is a PagedKVCache pool,
+    block_tables (B, max_blocks) addresses it, and cache_index is the (B,)
+    per-slot first-token position (x may carry S > 1 chunk tokens).
     """
     cross = kv_src is not None
     src = kv_src if cross else x
     q, k, v = _project_qkv(x, src, p, cfg, positions, rope=not cross)
 
     if cache is not None and not cross:
-        # Decode: append this step's k/v then attend over the whole cache.
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache_index, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache_index, axis=1)
-        new_cache = KVCache(k_cache, v_cache)
+        from repro.serving import kv_cache as paged
+
+        if isinstance(cache, paged.PagedKVCache):
+            # Paged decode: scatter this step's k/v through the block table,
+            # then attend over the slot's gathered view of the pool.
+            assert block_tables is not None, "paged cache needs block_tables"
+            new_cache = paged.write_kv(cache, block_tables, k, v, cache_index)
+            k_cache, v_cache = paged.gather_kv(new_cache, block_tables)
+        else:
+            # Dense decode: append this step's k/v then attend over the cache.
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache_index, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache_index, axis=1)
+            new_cache = KVCache(k_cache, v_cache)
         out = decode_attention(
             q, k_cache, v_cache, index=cache_index,
             window=window, prefix_len=prefix_len,

@@ -79,6 +79,7 @@ def apply_block(
     cache_index: Optional[jax.Array] = None,
     encoder_out: Optional[jax.Array] = None,
     cross_cache: Optional[attn_lib.KVCache] = None,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Any]:
     """Returns (x, new_mixer_cache).  cache is the mixer state (KV / SSM)."""
     h = _norm(x, p["norm1"], cfg)
@@ -87,7 +88,7 @@ def apply_block(
         h, new_cache = attn_lib.attention(
             h, p["mixer"], cfg, positions=positions, causal=causal,
             window=window, prefix_len=prefix_len, cache=cache,
-            cache_index=cache_index,
+            cache_index=cache_index, block_tables=block_tables,
         )
     elif kind == "mamba":
         h, new_cache = ssm.mamba_block(h, p["mixer"], cfg, state=cache)
@@ -137,6 +138,7 @@ def init_group(key, cfg, *, cross_attention: bool = False):
 def apply_group(
     x, gp, cfg, *, positions, causal=True, prefix_len=0,
     caches=None, cache_index=None, encoder_out=None, cross_caches=None,
+    block_tables=None,
 ):
     """Apply one group of cfg.group_size blocks; returns (x, new_caches)."""
     kinds = cfg.layer_kinds()
@@ -149,6 +151,7 @@ def apply_group(
             cache_index=cache_index,
             encoder_out=encoder_out,
             cross_cache=None if cross_caches is None else cross_caches[i],
+            block_tables=block_tables,
         )
         new_caches.append(nc)
     return x, tuple(new_caches)
@@ -169,3 +172,19 @@ def init_cache_for_kind(cfg, kind: str, batch: int, max_seq: int):
     if kind == "slstm":
         return ssm.init_slstm_state(cfg, batch)
     raise ValueError(kind)
+
+
+def init_paged_cache_for_kind(
+    cfg, kind: str, batch: int, num_blocks: int, block_size: int
+):
+    """Paged-serving decode state: attention kinds get a shared block pool
+    (no per-slot KV allocation — the point of paging); SSM kinds keep their
+    O(1) per-slot state."""
+    from repro.serving import kv_cache as paged
+
+    if kind in ("attn", "attn_local"):
+        return paged.init_paged_kv(
+            num_blocks, block_size, cfg.n_kv_heads, cfg.resolved_head_dim,
+            cfg.jax_dtype,
+        )
+    return init_cache_for_kind(cfg, kind, batch, 0)

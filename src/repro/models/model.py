@@ -249,23 +249,12 @@ def decode_step(
 ) -> Tuple[jax.Array, DecodeState]:
     """One token for every sequence: tokens (B, 1) -> logits (B, 1, vocab)."""
     B = tokens.shape[0]
-    x = layers.embed(tokens, params["embed"])
-    if cfg.tie_embeddings:
-        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    x = shard(x, "batch", "seq", "embed")
+    x = _embed_tokens(params, cfg, tokens)
     positions = state.index[None] + jnp.zeros((B, 1), jnp.int32)
 
     if state.cross_caches is None:
-
-        def body(h, xs):
-            gp, gcache = xs
-            h, new_caches = blocks.apply_group(
-                h, gp, cfg, positions=positions, causal=True,
-                caches=gcache, cache_index=state.index,
-            )
-            return h, new_caches
-
-        x, new_caches = jax.lax.scan(body, x, (params["blocks"], state.caches))
+        x, new_caches = _trunk_step(
+            params, cfg, x, positions, state.caches, state.index, None)
     else:
 
         def body(h, xs):
@@ -289,6 +278,208 @@ def decode_step(
         caches=new_caches, cross_caches=state.cross_caches, index=state.index + 1
     )
     return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# paged serving: per-slot lengths, block-table KV addressing, chunked prefill
+# ---------------------------------------------------------------------------
+
+class PagedDecodeState(NamedTuple):
+    """Serving decode state: shared KV block pools + per-slot request state.
+
+    Unlike `DecodeState`'s single scalar position, every slot tracks its own
+    length, so slots can be refilled mid-flight (continuous batching) without
+    re-initializing anyone else's state.
+    """
+
+    caches: Any                   # per-group tuple-of-kind states (stacked);
+                                  # attention kinds hold PagedKVCache pools
+    block_tables: jax.Array       # (slots, max_blocks) int32 into the pool
+    lengths: jax.Array            # (slots,) int32 tokens held per slot
+
+
+def init_paged_decode_state(
+    cfg: ArchConfig, slots: int, *, num_blocks: int, block_size: int,
+    max_blocks_per_slot: int,
+) -> PagedDecodeState:
+    if cfg.family in ("encdec", "vlm"):
+        raise NotImplementedError(
+            f"paged serving not wired for family {cfg.family!r}")
+    kinds = cfg.layer_kinds()
+
+    def make_group(_):
+        return tuple(
+            blocks.init_paged_cache_for_kind(cfg, kind, slots, num_blocks, block_size)
+            for kind in kinds
+        )
+
+    caches = jax.vmap(make_group)(jnp.arange(cfg.n_groups))
+    return PagedDecodeState(
+        caches=caches,
+        block_tables=jnp.zeros((slots, max_blocks_per_slot), jnp.int32),
+        lengths=jnp.zeros((slots,), jnp.int32),
+    )
+
+
+def _trunk_step(params, cfg, x, positions, caches, cache_index, block_tables):
+    """Scan the block groups in decode mode; returns (hidden, new_caches)."""
+
+    def body(h, xs):
+        gp, gcache = xs
+        h, new_caches = blocks.apply_group(
+            h, gp, cfg, positions=positions, causal=True,
+            caches=gcache, cache_index=cache_index, block_tables=block_tables,
+        )
+        return h, new_caches
+
+    return jax.lax.scan(body, x, (params["blocks"], caches))
+
+
+def _embed_tokens(params, cfg, tokens):
+    x = layers.embed(tokens, params["embed"])
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def paged_decode_step(
+    params, cfg: ArchConfig, state: PagedDecodeState, tokens: jax.Array,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, PagedDecodeState]:
+    """One token for every *active* slot at its own position: tokens (B, 1)
+    -> logits (B, 1, vocab).
+
+    `active` (B,) bool masks slots that are idle or mid-prefill while this
+    decode batch runs: their lengths and recurrent states are held (the
+    whole batch computes, but inactive updates are discarded), so
+    interleaved prefill chunks resume exactly where they left off.  Inactive
+    KV writes land at/above the slot's true length — positions the mask
+    hides until a real token overwrites them — or in the null block."""
+    x = _embed_tokens(params, cfg, tokens)
+    positions = state.lengths[:, None]
+    x, new_caches = _trunk_step(
+        params, cfg, x, positions, state.caches, state.lengths,
+        state.block_tables,
+    )
+    if active is not None:
+        new_caches = _select_slots(active, new_caches, state.caches)
+        new_lengths = state.lengths + active.astype(jnp.int32)
+    else:
+        new_lengths = state.lengths + 1
+    x = blocks._norm(x, params["final_norm"], cfg)
+    logits = _unembed(x, params, cfg)
+    return logits, PagedDecodeState(
+        caches=new_caches, block_tables=state.block_tables,
+        lengths=new_lengths,
+    )
+
+
+def _select_slots(active, new_caches, old_caches):
+    """Keep updates only for active slots.  Paged KV pools pass through —
+    an inactive slot's write sits at/above its length, invisible until a
+    real write replaces it — while per-slot recurrent states revert."""
+    from repro.serving.kv_cache import PagedKVCache
+
+    out = []
+    for n, o in zip(new_caches, old_caches):
+        if isinstance(n, PagedKVCache):
+            out.append(n)
+            continue
+
+        def sel(a, b):
+            mask = active.reshape((1, -1) + (1,) * (a.ndim - 2))
+            return jnp.where(mask, a, b)
+
+        out.append(jax.tree_util.tree_map(sel, n, o))
+    return tuple(out)
+
+
+def _slice_slot_caches(caches, slot, width: int = 1):
+    """Per-kind slot slice: SSM states are per-slot (axis 1 under the group
+    axis); paged KV pools are shared and pass through whole."""
+    from repro.serving.kv_cache import PagedKVCache
+
+    out = []
+    for c in caches:
+        if isinstance(c, PagedKVCache):
+            out.append(c)
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, width, axis=1), c))
+    return tuple(out)
+
+
+def _merge_slot_caches(full, part, slot):
+    """Write a slot-sliced cache update back; pools come back whole."""
+    from repro.serving.kv_cache import PagedKVCache
+
+    out = []
+    for f, pt in zip(full, part):
+        if isinstance(f, PagedKVCache):
+            out.append(pt)
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                    a, b.astype(a.dtype), slot, axis=1), f, pt))
+    return tuple(out)
+
+
+def prefill_chunk(
+    params, cfg: ArchConfig, state: PagedDecodeState, tokens: jax.Array,
+    slot: jax.Array,
+) -> Tuple[jax.Array, PagedDecodeState]:
+    """Advance one slot by a chunk of C prompt tokens: tokens (1, C) ->
+    (last-position logits (1, 1, vocab), updated state).
+
+    The chunk attends causally over the slot's block-table view (which the
+    same step just wrote), and SSM states advance by C tokens via their
+    chunked scans — C-fold fewer step dispatches than token-by-token, the
+    input-prefetch/output-buffering analogue.  The LM head runs on the last
+    position only (the (1, C, vocab) tensor is never needed)."""
+    C = tokens.shape[1]
+    start = jax.lax.dynamic_slice_in_dim(state.lengths, slot, 1)       # (1,)
+    tables = jax.lax.dynamic_slice_in_dim(state.block_tables, slot, 1, axis=0)
+    caches = _slice_slot_caches(state.caches, slot)
+    x = _embed_tokens(params, cfg, tokens)
+    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x, part_caches = _trunk_step(
+        params, cfg, x, positions, caches, start, tables)
+    x = blocks._norm(x[:, -1:], params["final_norm"], cfg)
+    logits = _unembed(x, params, cfg)
+    new_lengths = jax.lax.dynamic_update_slice(
+        state.lengths, start + jnp.int32(C), (slot,))
+    return logits, PagedDecodeState(
+        caches=_merge_slot_caches(state.caches, part_caches, slot),
+        block_tables=state.block_tables,
+        lengths=new_lengths,
+    )
+
+
+def reset_slots(
+    cfg: ArchConfig, state: PagedDecodeState, mask: jax.Array,
+) -> PagedDecodeState:
+    """Zero the recurrent state and length of every masked slot for fresh
+    requests — slot refill without re-initializing the whole batch, and one
+    step per admission wave however many slots it fills.  KV pages need no
+    reset: freed blocks are re-written before the length mask exposes them."""
+    from repro.serving.kv_cache import PagedKVCache
+
+    kinds = cfg.layer_kinds()
+    fresh = []
+    for kind, cur in zip(kinds, state.caches):
+        if isinstance(cur, PagedKVCache):
+            fresh.append(cur)
+            continue
+        one = blocks.init_cache_for_kind(cfg, kind, 1, 0)   # batch-1 template
+
+        def sel(full, init):
+            m = mask.reshape((1, -1) + (1,) * (full.ndim - 2))
+            return jnp.where(m, init[None].astype(full.dtype), full)
+
+        fresh.append(jax.tree_util.tree_map(sel, cur, one))
+    lengths = jnp.where(mask, 0, state.lengths)
+    return PagedDecodeState(
+        caches=tuple(fresh), block_tables=state.block_tables, lengths=lengths)
 
 
 def prefill(

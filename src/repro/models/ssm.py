@@ -72,7 +72,14 @@ def mamba_block(
     state: Optional[MambaState] = None,
     chunk: int = 16,
 ) -> Tuple[jax.Array, Optional[MambaState]]:
-    """x: (B, S, d) -> (B, S, d).  state!=None => decode (S==1)."""
+    """x: (B, S, d) -> (B, S, d).
+
+    state is None -> training/prefill-from-scratch (no state returned).
+    state given, S == 1 -> decode: one O(1) update.
+    state given, S > 1  -> chunked prefill: advance the carried state by S
+    tokens with the chunked selective scan (conv context and h both resume
+    from the state), returning the updated state.
+    """
     B, S, d = x.shape
     mc = cfg.mamba
     di = mc.expand * d
@@ -80,7 +87,7 @@ def mamba_block(
     x_in, z = jnp.split(xz, 2, axis=-1)         # (B, S, di) each
     x_in = shard(x_in, "batch", "seq", "mlp")
 
-    if state is not None:
+    if state is not None and S == 1:
         # --- decode: O(1) update --------------------------------------------
         conv_ctx = jnp.concatenate([state.conv, x_in.astype(state.conv.dtype)], axis=1)
         w = p["conv_w"].astype(jnp.float32)     # (dc, di)
@@ -97,8 +104,12 @@ def mamba_block(
         return shard(out, "batch", "seq", "embed"), new_state
 
     # --- training / prefill: chunked selective scan --------------------------
+    # The causal-conv context and the SSM state h resume from `state` when
+    # given (chunked prefill), and start at zero otherwise.
     dc = mc.d_conv
-    xp = jnp.pad(x_in, ((0, 0), (dc - 1, 0), (0, 0)))
+    tail = (state.conv if state is not None
+            else jnp.zeros((B, dc - 1, di), x_in.dtype))
+    xp = jnp.concatenate([tail.astype(x_in.dtype), x_in], axis=1)
     w = p["conv_w"].astype(jnp.float32)
     xc = sum(
         xp[:, i : i + S].astype(jnp.float32) * w[i] for i in range(dc)
@@ -106,7 +117,8 @@ def mamba_block(
     xc = jax.nn.silu(xc).astype(x.dtype)        # (B, S, di)
 
     chunk = min(chunk, S)
-    assert S % chunk == 0, (S, chunk)
+    while S % chunk:
+        chunk //= 2
     n_chunks = S // chunk
 
     def chunk_body(h, xc_c):
@@ -126,14 +138,17 @@ def mamba_block(
         return h_c[:, -1], y_c
 
     resh = lambda t: jnp.moveaxis(t.reshape(B, n_chunks, chunk, *t.shape[2:]), 1, 0)
-    h0 = jnp.zeros((B, di, mc.d_state), jnp.float32)
+    h0 = (state.h if state is not None
+          else jnp.zeros((B, di, mc.d_state), jnp.float32))
     # checkpoint: backward recomputes one chunk at a time; only the per-chunk
     # carry states (B, di, ds) are saved across the sequence.
-    _, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, resh(xc))
+    h_final, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, resh(xc))
     y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
     y = y + p["D"] * xc.astype(jnp.float32)
     out = layers.dense((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["w_out"])
-    return shard(out, "batch", "seq", "embed"), None
+    new_state = (MambaState(h=h_final, conv=xp[:, S:].astype(tail.dtype))
+                 if state is not None else None)
+    return shard(out, "batch", "seq", "embed"), new_state
 
 
 def init_mamba_state(cfg, batch: int) -> MambaState:

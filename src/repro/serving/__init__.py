@@ -1,0 +1,48 @@
+"""Serving engine: request scheduler + paged KV cache + chunked prefill.
+
+The three components map the paper's utilization mechanisms onto the
+request path (see EXPERIMENTS.md §Serving):
+
+  configuration pre-loading  -> Engine.warmup(): autotune + AOT-compile the
+                                decode step and every prefill chunk bucket
+                                before traffic
+  input pre-fetch / output   -> chunked prefill: C prompt tokens per step,
+  buffering                     interleaved with decode batches
+  strided memory access      -> paged KV cache: block pool + per-request
+                                block tables
+
+Only ``kv_cache`` is imported eagerly (models/attention.py depends on it);
+the engine/scheduler live behind a lazy ``__getattr__`` so the model layer
+never pulls in its own callers.
+"""
+
+from repro.serving.kv_cache import (  # noqa: F401
+    BlockAllocator,
+    BlockTables,
+    NULL_BLOCK,
+    PagedKVCache,
+    blocks_for,
+    default_pool_blocks,
+    gather_kv,
+    init_paged_kv,
+    write_kv,
+)
+
+_LAZY = {
+    "Engine": ("repro.serving.engine", "Engine"),
+    "EngineMetrics": ("repro.serving.engine", "EngineMetrics"),
+    "Request": ("repro.serving.scheduler", "Request"),
+    "RequestMetrics": ("repro.serving.engine", "RequestMetrics"),
+    "Scheduler": ("repro.serving.scheduler", "Scheduler"),
+    "plan_chunks": ("repro.serving.prefill", "plan_chunks"),
+    "chunk_buckets": ("repro.serving.prefill", "chunk_buckets"),
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")

@@ -1,0 +1,413 @@
+"""Serving engine facade: warmup, request lifecycle, metrics.
+
+Maps the paper's three utilization mechanisms onto the request path:
+
+  * `warmup()` — **configuration pre-loading**: the GeMM tile autotuner and
+    the XLA compiler both run before traffic.  Every step the server can
+    ever execute (the decode step, each power-of-two prefill-chunk bucket,
+    the slot reset) is traced and compiled into the jit cache during
+    warmup, so no request ever pays a compile.
+  * chunked prefill interleaved with decode — **input pre-fetching with
+    output buffering**: C prompt tokens stream through one step while
+    decode batches drain between chunks; prefill work is proportional to
+    real tokens (no padding positions, see serving/prefill.py).
+  * the paged KV cache — **programmable strided memory access**: block
+    tables address a shared pool, so slot memory tracks actual lengths and
+    finished slots hand their blocks to the next request.
+
+Typical use (launch/serve.py is a thin CLI over exactly this):
+
+    eng = Engine(cfg, slots=4, max_seq=256, autotune=True)
+    eng.warmup()
+    for p in prompts:
+        eng.submit(p, max_new=16)
+    results = eng.run()
+    print(eng.metrics.summary())
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import GemmShape
+from repro.models import model as M
+from repro.serving import kv_cache as kvc
+from repro.serving.prefill import chunk_buckets
+from repro.serving.scheduler import Phase, Request, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# warmup shape extraction (tile autotuning, the CPL analogue's first half)
+# ---------------------------------------------------------------------------
+
+def serving_gemm_shapes(cfg, *, slots: int, chunks: Optional[List[int]] = None
+                        ) -> List[GemmShape]:
+    """The per-step *dense-projection* GeMMs of the serving path: the shapes
+    to pre-tune.
+
+    A decode step runs, per attention layer, the separate q/k/v and output
+    projections (models/attention.py: wq (d, hq*hd), wk/wv (d, hkv*hd),
+    wo (hq*hd, d)) and — for dense-FFN archs — the two FFN matmuls over
+    `slots` token rows, plus the vocab head.  Chunked prefill runs the same
+    projections over `C` rows per bucket size C (batch 1), so those M-dims
+    are warmed too.  MoE expert matmuls (einsum over stacked expert weights)
+    and SSM scans do not route through spec-dispatched ops.gemm, so they are
+    not warmed here.
+    """
+    d, ff, vocab = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    rows = [slots] + list(chunks or [])
+    shapes = []
+    for m in rows:
+        if cfg.family != "ssm":          # archs with attention layers
+            shapes += [
+                GemmShape(m, d, hq * hd),    # q projection
+                GemmShape(m, d, hkv * hd),   # k / v projections
+                GemmShape(m, hq * hd, d),    # attention output projection
+            ]
+        if cfg.moe is None:              # dense FFN (MoE experts run via einsum)
+            shapes += [
+                GemmShape(m, d, ff),         # FFN up (and swiglu gate)
+                GemmShape(m, ff, d),         # FFN down
+            ]
+        shapes.append(GemmShape(m, d, vocab))  # LM head
+    seen, out = set(), []
+    for s in shapes:
+        if s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+def autotune_for_serving(cfg, *, slots: int, mode: str = "analytic",
+                         chunks: Optional[List[int]] = None,
+                         verbose: bool = True) -> None:
+    """Warm the tuner cache for this model's shapes and enable tuned dispatch."""
+    from repro import tuning
+
+    tuner = tuning.Autotuner(mode=mode)
+    tuning.set_tuner(tuner)
+    shapes = serving_gemm_shapes(cfg, slots=slots, chunks=chunks)
+    if verbose:
+        print(f"autotune[{mode}]: {len(shapes)} GeMM shapes for {cfg.name}")
+    for r, s in zip(tuner.warmup(shapes, dtype=cfg.dtype), shapes):
+        if verbose:
+            hit = "cache" if r.from_cache else r.source
+            print(f"  {s.M}x{s.K}x{s.N}: tile=({r.spec.tm},{r.spec.tk},"
+                  f"{r.spec.tn}) [{hit}]")
+    tuning.enable()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    prompt_len: int
+    new_tokens: int
+    ttft_s: float                 # submit -> first generated token
+    latency_s: float              # submit -> finish
+    queue_steps: int              # engine ticks spent waiting for a slot
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    prefill_chunks: int = 0
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    decode_tokens: int = 0
+    decode_time_s: float = 0.0    # wall clock spent in decode ticks only
+    aot_steps: int = 0            # executables compiled during warmup
+    cold_compiles: int = 0        # steps that missed the warmup cache
+    peak_blocks_in_use: int = 0
+    occupancy_sum: float = 0.0
+    occupancy_samples: int = 0
+    elapsed_s: float = 0.0
+    requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(1, self.occupancy_samples)
+
+    @property
+    def throughput_tok_s(self) -> float:
+        """Decode throughput over decode-tick time only — dividing by the
+        total elapsed time would fold prefill ticks into the denominator
+        and understate prompt-heavy workloads."""
+        return self.decode_tokens / self.decode_time_s if self.decode_time_s else 0.0
+
+    def summary(self) -> str:
+        n = len(self.requests)
+        ttft = np.mean([r.ttft_s for r in self.requests]) if n else 0.0
+        lat = np.mean([r.latency_s for r in self.requests]) if n else 0.0
+        return (
+            f"requests={n} prefill_chunks={self.prefill_chunks} "
+            f"prefill_tokens={self.prefill_tokens} "
+            f"decode_steps={self.decode_steps} "
+            f"decode={self.decode_tokens} tok ({self.throughput_tok_s:.1f} tok/s) "
+            f"ttft={ttft*1e3:.0f}ms latency={lat*1e3:.0f}ms "
+            f"kv_occupancy={self.mean_occupancy:.0%} "
+            f"peak_blocks={self.peak_blocks_in_use} "
+            f"warmed={self.aot_steps} cold_compiles={self.cold_compiles}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Continuous-batching serving engine over the paged decode state."""
+
+    def __init__(
+        self,
+        cfg,
+        params=None,
+        *,
+        slots: int = 4,
+        max_seq: int = 256,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        max_chunk: int = 64,
+        autotune: bool = False,
+        tune_mode: str = "analytic",
+        max_queue: Optional[int] = None,
+        seed: int = 0,
+        verbose: bool = False,
+    ):
+        from repro.launch import steps as steps_lib
+
+        self.cfg = cfg
+        self.params = (params if params is not None
+                       else M.init_model(jax.random.PRNGKey(seed), cfg))
+        self.slots, self.max_seq = slots, max_seq
+        self.block_size = block_size
+        self.max_blocks_per_slot = kvc.blocks_for(max_seq, block_size)
+        self.num_blocks = num_blocks or kvc.default_pool_blocks(
+            slots, max_seq, block_size)
+        # No prompt can exceed max_seq, so larger buckets would only be
+        # compiled, never dispatched.
+        self.max_chunk = min(max_chunk, max_seq)
+        self.autotune = autotune
+        self.tune_mode = tune_mode
+        self.verbose = verbose
+
+        self.scheduler = Scheduler(slots, max_chunk=max_chunk, max_queue=max_queue)
+        self.alloc = kvc.BlockAllocator(self.num_blocks, block_size)
+        self.tables = kvc.BlockTables(slots, self.max_blocks_per_slot)
+        self.state = M.init_paged_decode_state(
+            cfg, slots, num_blocks=self.num_blocks, block_size=block_size,
+            max_blocks_per_slot=self.max_blocks_per_slot,
+        )
+        self.metrics = EngineMetrics()
+
+        self._decode_fn = jax.jit(steps_lib.make_paged_serve_step(cfg))
+        self._chunk_fn = jax.jit(steps_lib.make_prefill_chunk_step(cfg))
+        self._reset_fn = jax.jit(
+            lambda state, mask: M.reset_slots(cfg, state, mask))
+        self._warmed: set = set()                # step shapes compiled so far
+        self._slot_used = [False] * slots        # occupied at least once
+        # Scalar construction (jnp.int32) costs ~0.7 ms on CPU jax; slot ids
+        # are a fixed set, so build them once.
+        self._slot_ids = [jnp.int32(s) for s in range(slots)]
+        self._last_token = np.zeros((slots,), np.int32)
+        self._reserved: Dict[int, int] = {}      # rid -> blocks reserved
+        self._step = 0
+        self._t0: Optional[float] = None
+        self._submit_t: Dict[int, float] = {}
+        self._first_tok_t: Dict[int, float] = {}
+        self.results: Dict[int, np.ndarray] = {}
+
+    # -- warmup: the configuration-pre-loading analogue ----------------------
+
+    def warmup(self) -> None:
+        """Autotune GeMM tiles and trace+compile every step shape before
+        traffic: the decode step, each prefill-chunk bucket, the slot reset.
+
+        Each step is invoked once on dummy inputs (outputs discarded — the
+        steps are functional), populating the jit executable cache; serve
+        time then always dispatches through jit's C++ fast path.  An AOT
+        ``.lower().compile()`` executable would also pre-compile, but its
+        Python-side call path re-validates the params pytree per call
+        (measured ~4 ms/step on CPU, double the decode step itself)."""
+        buckets = chunk_buckets(self.max_chunk)
+        if self.autotune:
+            autotune_for_serving(
+                self.cfg, slots=self.slots, mode=self.tune_mode,
+                chunks=buckets, verbose=self.verbose)
+        tokens = jnp.zeros((self.slots, 1), jnp.int32)
+        active = jnp.zeros((self.slots,), bool)
+        slot0 = self._slot_ids[0]
+        jax.block_until_ready(
+            self._decode_fn(self.params, self.state, tokens, active))
+        self._warmed.add("decode")
+        for c in buckets:
+            jax.block_until_ready(self._chunk_fn(
+                self.params, self.state, jnp.zeros((1, c), jnp.int32), slot0))
+            self._warmed.add(f"chunk{c}")
+        jax.block_until_ready(
+            self._reset_fn(self.state, jnp.zeros((self.slots,), bool)))
+        self._warmed.add("reset")
+        self.metrics.aot_steps = len(self._warmed)
+        if self.verbose:
+            print(f"warmup: {len(self._warmed)} step shapes compiled "
+                  f"(decode + chunks {buckets} + reset)")
+
+    def _run_compiled(self, key: str, fn, *args):
+        if key not in self._warmed:
+            self.metrics.cold_compiles += 1
+            self._warmed.add(key)
+        return fn(*args)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, prompt, max_new: int, *, eos_token: Optional[int] = None
+               ) -> Optional[Request]:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt: nothing to prefill")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1 (the first token falls "
+                             "out of the final prefill chunk)")
+        if len(prompt) + max_new > self.max_seq:
+            raise ValueError(
+                f"prompt {len(prompt)} + max_new {max_new} exceeds "
+                f"max_seq {self.max_seq}")
+        if kvc.blocks_for(len(prompt) + max_new, self.block_size) > self.num_blocks - 1:
+            raise ValueError(
+                f"request needs more KV blocks than the whole pool "
+                f"({self.num_blocks - 1}); raise num_blocks")
+        req = self.scheduler.submit(prompt, max_new, eos_token=eos_token,
+                                    step=self._step)
+        if req is not None:
+            self._submit_t[req.rid] = time.monotonic()
+        return req
+
+    def _can_admit(self, req: Request) -> bool:
+        return self.alloc.can_reserve(
+            kvc.blocks_for(req.prompt_len + req.max_new, self.block_size))
+
+    def _admit(self) -> None:
+        to_reset = []
+        for slot, req in self.scheduler.admit(self._can_admit):
+            n = kvc.blocks_for(req.prompt_len + req.max_new, self.block_size)
+            if not self.alloc.reserve(n):   # _can_admit just vouched for this
+                raise RuntimeError(f"reservation of {n} blocks failed post-admit")
+            self._reserved[req.rid] = n
+            # A *refilled* slot needs its recurrent state and length zeroed
+            # (the rest of the batch keeps decoding undisturbed); a
+            # never-used slot is already zeroed — no step needed.
+            if self._slot_used[slot]:
+                to_reset.append(slot)
+            self._slot_used[slot] = True
+        if to_reset:
+            mask = np.zeros((self.slots,), bool)
+            mask[to_reset] = True
+            self.state = self._run_compiled(
+                "reset", self._reset_fn, self.state, jnp.asarray(mask))
+
+    def _sync_tables(self) -> None:
+        if self.tables.dirty:
+            self.state = self.state._replace(block_tables=self.tables.array())
+
+    def _finish(self, req: Request) -> None:
+        slot = self.scheduler.release(req)
+        drawn = len(self.tables.blocks[slot])
+        unused = max(0, self._reserved.pop(req.rid, drawn) - drawn)
+        self.tables.release(slot, self.alloc, unreserve=unused)
+        self.results[req.rid] = np.asarray(req.out_tokens, np.int32)
+        now = time.monotonic()
+        t_submit = self._submit_t.pop(req.rid)   # fully consumed here; a
+        t_first = self._first_tok_t.pop(req.rid, now)  # long-lived engine
+        self.metrics.requests.append(RequestMetrics(  # must not leak these
+            rid=req.rid, prompt_len=req.prompt_len,
+            new_tokens=len(req.out_tokens),
+            ttft_s=t_first - t_submit,
+            latency_s=now - t_submit,
+            queue_steps=(req.first_token_step or self._step) - req.submit_step,
+        ))
+
+    def _record_token(self, req: Request, token: int) -> None:
+        if req.first_token_step is None:
+            self._first_tok_t[req.rid] = time.monotonic()
+        self.scheduler.on_token(req, token, self._step)
+        self._last_token[req.slot if req.slot >= 0 else 0] = token
+        if req.phase is Phase.FINISHED:
+            self._finish(req)
+
+    # -- the serve loop ------------------------------------------------------
+
+    def tick(self) -> bool:
+        """Admit, then execute one scheduler action.  Returns False when no
+        work remains."""
+        self._admit()
+        action = self.scheduler.next_action()
+        if action is None:
+            return self.scheduler.has_work
+        self._step += 1
+        if action[0] == "prefill":
+            _, req, chunk = action
+            self.tables.ensure(req.slot, req.prefilled + chunk, self.alloc)
+            self._sync_tables()
+            tokens = jnp.asarray(
+                req.prompt[None, req.prefilled:req.prefilled + chunk])
+            logits, self.state = self._run_compiled(
+                f"chunk{chunk}", self._chunk_fn,
+                self.params, self.state, tokens, self._slot_ids[req.slot])
+            self.scheduler.on_prefill(req, chunk, self._step)
+            self.metrics.prefill_chunks += 1
+            self.metrics.prefill_tokens += chunk
+            if req.phase is Phase.DECODE:
+                # Prompt complete: the chunk's last logits yield the first
+                # generated token (no separate step for it).  Index on the
+                # numpy copy — slicing a device array dispatches un-jitted
+                # primitives that would compile tiny kernels at serve time.
+                self._record_token(req, int(np.argmax(np.asarray(logits)[0, -1])))
+        else:
+            _, reqs = action
+            # The step writes at position r.length - 1 (the last recorded
+            # token's KV goes in on the step that consumes it), so covering
+            # r.length tokens suffices — +1 would draw blocks a step early.
+            for r in reqs:
+                self.tables.ensure(r.slot, r.length, self.alloc)
+            self._sync_tables()
+            tokens = jnp.asarray(self._last_token[:, None])
+            active = np.zeros((self.slots,), bool)
+            active[[r.slot for r in reqs]] = True
+            t_dec = time.monotonic()
+            logits, self.state = self._run_compiled(
+                "decode", self._decode_fn, self.params, self.state, tokens,
+                jnp.asarray(active))
+            next_tok = np.argmax(np.asarray(logits)[:, -1], axis=-1)
+            self.metrics.decode_time_s += time.monotonic() - t_dec
+            for r in reqs:
+                self._record_token(r, int(next_tok[r.slot]))
+            self.metrics.decode_steps += 1
+            self.metrics.decode_tokens += len(reqs)
+        self.metrics.peak_blocks_in_use = max(
+            self.metrics.peak_blocks_in_use, self.alloc.in_use)
+        self.metrics.occupancy_sum += self.alloc.occupancy()
+        self.metrics.occupancy_samples += 1
+        return True
+
+    def run(self, max_ticks: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drive the loop until the queue and all slots drain."""
+        self._t0 = time.monotonic()
+        ticks = 0
+        while self.scheduler.has_work:
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+            if not self.tick():
+                break
+            ticks += 1
+        self.metrics.elapsed_s += time.monotonic() - self._t0
+        return self.results

@@ -1,0 +1,250 @@
+"""Paged KV cache: fixed-size blocks + per-request block tables.
+
+The serving analogue of the paper's programmable strided memory access
+(SMA): instead of one dense (slots, S_max, H, D) buffer that pins worst-case
+memory per slot, K/V live in a shared pool of `num_blocks` blocks of
+`block_size` tokens each, and every request addresses its tokens through a
+block table — a programmable stride pattern over the pool.  Slot memory is
+decoupled from `max_seq`: idle slots hold zero blocks, and a slot refilled
+with a new request reuses freed blocks without re-initializing the pool.
+
+Layout (per attention layer):
+
+  k_pool / v_pool : (num_blocks, block_size, H_kv, D)
+  block_tables    : (slots, max_blocks_per_slot) int32, entries index blocks
+
+Block id 0 is a reserved *null* block: unallocated table entries point at
+it, and writes from idle slots or masked positions land there.  It is never
+handed out by the allocator, so garbage in it is never attended (the causal
+length mask excludes every position a table does not really cover).
+
+The device side is pure array math (`write_kv` / `gather_kv`), jit-safe and
+scanned over layer groups; the host side (`BlockAllocator`, `BlockTables`)
+makes allocation decisions between steps, exactly like the paper's RISC-V
+core programs the streamer strides between GeMM calls.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+class PagedKVCache(NamedTuple):
+    """Block-pooled decode cache for one attention layer (or a stacked group).
+
+    Mirrors ``attention.KVCache``'s (k, v) fields so the two cache kinds are
+    interchangeable pytree leaves; ``isinstance`` distinguishes them where
+    the addressing differs.
+    """
+
+    k: jax.Array  # (num_blocks, block_size, H_kv, D)
+    v: jax.Array  # (num_blocks, block_size, H_kv, D)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k.shape[-4]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[-3]
+
+
+def init_paged_kv(
+    num_blocks: int, block_size: int, n_kv_heads: int, head_dim: int, dtype
+) -> PagedKVCache:
+    shape = (num_blocks, block_size, n_kv_heads, head_dim)
+    return PagedKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def _flat_positions(block_tables: jax.Array, start, S: int, block_size: int
+                    ) -> jax.Array:
+    """Pool-flat write/read indices for S tokens starting at `start` per slot.
+
+    block_tables: (B, max_blocks); start: scalar or (B,).  Returns (B, S)
+    indices into the (num_blocks * block_size)-flattened pool.  Positions
+    beyond a slot's table capacity resolve to the null block — without the
+    explicit mask, take_along_axis would clamp to the table's *last* entry
+    and silently overwrite a live block.
+    """
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.broadcast_to(start, (block_tables.shape[0],))
+    pos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]   # (B, S)
+    pos = jnp.maximum(pos, 0)
+    table_cap = block_tables.shape[1] * block_size
+    blk = jnp.take_along_axis(
+        block_tables, jnp.minimum(pos, table_cap - 1) // block_size, axis=1)
+    blk = jnp.where(pos < table_cap, blk, NULL_BLOCK)
+    return blk * block_size + pos % block_size
+
+
+def write_kv(
+    cache: PagedKVCache,
+    block_tables: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    start,
+) -> PagedKVCache:
+    """Scatter S new tokens per slot into the pool at positions start..start+S-1.
+
+    k_new/v_new: (B, S, H, D).  Distinct live slots own distinct blocks, so
+    real writes never collide; idle-slot writes collapse onto the null block.
+    """
+    nb, bs, H, D = cache.k.shape
+    B, S = k_new.shape[:2]
+    flat = _flat_positions(block_tables, start, S, bs).reshape(-1)
+    k_pool = cache.k.reshape(nb * bs, H, D).at[flat].set(
+        k_new.astype(cache.k.dtype).reshape(-1, H, D), mode="drop")
+    v_pool = cache.v.reshape(nb * bs, H, D).at[flat].set(
+        v_new.astype(cache.v.dtype).reshape(-1, H, D), mode="drop")
+    return PagedKVCache(k=k_pool.reshape(nb, bs, H, D),
+                        v=v_pool.reshape(nb, bs, H, D))
+
+
+def gather_kv(
+    cache: PagedKVCache, block_tables: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-slot contiguous K/V views (B, max_blocks * block_size, H, D).
+
+    A gather through the block table — the strided-access read pattern.
+    Entries past a slot's true length read the null block; callers mask by
+    position, so that garbage is never attended.
+    """
+    nb, bs, H, D = cache.k.shape
+    B, max_blocks = block_tables.shape
+    flat = (block_tables[:, :, None] * bs
+            + jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(B, -1)
+    k = jnp.take(cache.k.reshape(nb * bs, H, D), flat, axis=0)
+    v = jnp.take(cache.v.reshape(nb * bs, H, D), flat, axis=0)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Host side: allocation decisions between steps
+# ---------------------------------------------------------------------------
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    return -(-tokens // block_size) if tokens > 0 else 0
+
+
+class BlockAllocator:
+    """Free-list allocator over pool blocks 1..num_blocks-1 (0 is the null
+    block) with admission-time reservations.
+
+    A request reserves its worst-case block count (ceil((prompt + max_new) /
+    block_size)) when admitted, then draws blocks lazily as its length
+    crosses block boundaries — so admission control guarantees a request
+    never starves mid-decode, while resident usage tracks actual length.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need at least 2 blocks (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))  # pop() -> 1 first
+        self._reserved = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Blocks neither allocated nor promised to an admitted request."""
+        return len(self._free) - self._reserved
+
+    @property
+    def in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.in_use / max(1, self.num_blocks - 1)
+
+    def can_reserve(self, n: int) -> bool:
+        return n <= self.available
+
+    def reserve(self, n: int) -> bool:
+        if not self.can_reserve(n):
+            return False
+        self._reserved += n
+        return True
+
+    def alloc(self, n: int, *, reserved: bool = True) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: want {n}, free {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        if reserved:
+            self._reserved = max(0, self._reserved - n)
+        return out
+
+    def free(self, ids: List[int], *, unreserve: int = 0) -> None:
+        for b in ids:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the null block")
+            self._free.append(b)
+        self._reserved = max(0, self._reserved - unreserve)
+
+
+class BlockTables:
+    """Host mirror of the device block tables: (slots, max_blocks) int32.
+
+    Tracks per-slot allocated block lists and materializes the device array
+    on demand.  The engine pushes `.array()` into the decode state whenever
+    a table row changed (admission, growth, release).
+    """
+
+    def __init__(self, slots: int, max_blocks: int):
+        self.slots = slots
+        self.max_blocks = max_blocks
+        self.table = np.zeros((slots, max_blocks), np.int32)
+        self.blocks: List[List[int]] = [[] for _ in range(slots)]
+        self.dirty = True
+
+    def covered_tokens(self, slot: int, block_size: int) -> int:
+        return len(self.blocks[slot]) * block_size
+
+    def ensure(self, slot: int, length: int, alloc: BlockAllocator) -> bool:
+        """Grow slot's table to cover `length` tokens; returns True if changed."""
+        need = blocks_for(length, alloc.block_size) - len(self.blocks[slot])
+        if need <= 0:
+            return False
+        if len(self.blocks[slot]) + need > self.max_blocks:
+            raise RuntimeError(
+                f"slot {slot}: {length} tokens exceed max_blocks {self.max_blocks}")
+        for b in alloc.alloc(need):
+            self.table[slot, len(self.blocks[slot])] = b
+            self.blocks[slot].append(b)
+        self.dirty = True
+        return True
+
+    def release(self, slot: int, alloc: BlockAllocator, *, unreserve: int = 0) -> int:
+        """Free all of slot's blocks back to the pool; returns count freed."""
+        ids = self.blocks[slot]
+        n = len(ids)
+        alloc.free(ids, unreserve=unreserve)
+        self.blocks[slot] = []
+        self.table[slot, :] = NULL_BLOCK
+        self.dirty = True
+        return n
+
+    def array(self) -> jax.Array:
+        self.dirty = False
+        return jnp.asarray(self.table)
+
+
+def default_pool_blocks(
+    slots: int, max_seq: int, block_size: int, *, headroom: float = 1.0
+) -> int:
+    """Pool sizing: null block + headroom * worst-case concurrent demand."""
+    per_slot = blocks_for(max_seq, block_size)
+    return 1 + max(1, math.ceil(headroom * slots * per_slot))

@@ -104,3 +104,32 @@ def test_gemmini_utilization_regime():
     tus = [gm.temporal_utilization(g) for g in sizes]
     avg = sum(tus) / len(tus)
     assert 0.01 < avg < 0.15, tus
+
+
+@pytest.mark.parametrize("mkn", GRID + [(7, 9, 13), (100, 100, 100)])
+def test_call_timing_spatial_utilization(mkn):
+    """CallTiming.spatial_utilization is the real padded-MAC ratio (not the
+    old 1.0 placeholder) and agrees with the dataflow definition and with
+    the MAC-weighted aggregate."""
+    sim = OpenGeMMSimulator()
+    g = GemmShape(*mkn)
+    t = sim.simulate_call(g)
+    su = t.spatial_utilization
+    assert 0 < su <= 1
+    assert su == pytest.approx(sim.df.spatial_utilization(g), abs=1e-12)
+    aligned = all(d % 8 == 0 for d in mkn)
+    assert (su == 1.0) == aligned
+    assert t.overall_utilization == pytest.approx(
+        su * t.temporal_utilization, abs=1e-12)
+
+
+def test_per_call_su_aggregates_to_workload_su():
+    """MAC-weighted per-call SU equals aggregate_utilization's SU for a
+    mixed-shape workload (also asserted inside OpenGeMMSimulator.report)."""
+    sim = OpenGeMMSimulator()
+    shapes = [GemmShape(7, 9, 13), GemmShape(64, 64, 64), GemmShape(120, 48, 200)]
+    timings = sim.simulate_sequence(shapes)
+    weighted = (sum(t.shape.macs for t in timings)
+                / sum(t.padded_shape.macs for t in timings))
+    rep = sim.report(shapes)
+    assert weighted == pytest.approx(rep.su, abs=1e-12)
