@@ -3,7 +3,7 @@ PY ?= python
 # src for the repro package, . so `benchmarks` resolves as a package.
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench lint
+.PHONY: test test-all bench bench-smoke lint
 
 # Tier-1 verify: deterministic suite; hypothesis modules auto-skip if absent.
 test:
@@ -16,6 +16,12 @@ test-all:
 # All paper-reproduction benchmarks as CSV (see EXPERIMENTS.md).
 bench:
 	$(PY) benchmarks/run.py
+
+# Smoke of every benchmark section: real code paths, wall-clock-heavy
+# sections shrunken (REPRO_BENCH_FAST); wired into CI so benchmark
+# scripts cannot silently rot.
+bench-smoke:
+	$(PY) benchmarks/run.py --fast
 
 # Import/syntax sweep; uses pyflakes when available, else compileall only.
 lint:

@@ -3,18 +3,38 @@
 Prints ``name,value,derived`` CSV rows (the harness contract) — for
 reproduction benchmarks `value` is the reproduced metric and `derived`
 carries the paper's reference value.  Sections: fig5, table2, fig7, table3,
-kernel (incl. autotuner deltas), plus roofline rows when dry-run results
-exist.  Expected runtime: ~1 min total on CPU; per-script details in each
-module's docstring and EXPERIMENTS.md.
+kernel (incl. autotuner deltas), serving (incl. float-vs-w8a8), plus
+roofline rows when dry-run results exist.  Expected runtime: ~2 min total
+on CPU; per-script details in each module's docstring and EXPERIMENTS.md.
+
+``--fast`` (= `make bench-smoke`, wired into CI) sets REPRO_BENCH_FAST=1
+before any section imports: every section still runs its real code paths,
+and the wall-clock-heavy ones (serving, table3's host GeMM timing) consume
+the flag to shrink their problems — the analytic sections (fig5, table2,
+fig7, kernel) are already seconds-fast and run unchanged.  Benchmark rot
+thus fails CI instead of lurking until the next full `make bench`.
+Fast-mode numbers are smoke signals, not results.
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke run: same code paths, shrunken problems "
+                         "(exports REPRO_BENCH_FAST=1)")
+    ap.add_argument("--only", default=None,
+                    help="run a single section (fig5|table2|fig7|table3|"
+                         "kernel|serving)")
+    args = ap.parse_args(argv)
+    if args.fast:
+        os.environ["REPRO_BENCH_FAST"] = "1"
     from benchmarks import (
         fig5_ablation,
         fig7_gemmini,
@@ -32,6 +52,10 @@ def main() -> None:
         ("kernel", kernel_bench),
         ("serving", serving_bench),
     ]
+    if args.only:
+        modules = [(n, m) for n, m in modules if n == args.only]
+        if not modules:
+            raise SystemExit(f"unknown section {args.only!r}")
     print("name,value,derived")
     ok = True
     for name, mod in modules:
@@ -44,9 +68,12 @@ def main() -> None:
             print(f"{name}/ERROR,{e!r},", file=sys.stderr)
         print(f"# {name}: {time.time()-t0:.1f}s", file=sys.stderr)
 
+    if args.only:     # --only means *only*: no roofline fall-through rows
+        if not ok:
+            raise SystemExit(1)
+        return
     # roofline rows from any dry-run results present on disk
     try:
-        import os
         from benchmarks import roofline_table
         for row in roofline_table.rows():
             print(f"{row['name']},{row['value']},{row['derived']}")

@@ -8,19 +8,66 @@ Paper artifact: Table 3 and the Sec. 4.4 efficiency figures.  Paper:
 constants we take from the paper (no synthesis here) — what we *reproduce*
 is every derived metric being consistent with the utilization model.
 
+The 4.68 TOPS/W headline presumes the int8 datapath (P_A=P_B=8): every MAC
+is an int8 MAC.  The `int8_gemm_speedup_host` row ties that presumption to
+this reproduction by *measuring* the int8-vs-f32 GeMM wall-clock ratio of
+the deployment path (ops.gemm_w8a8, the same kernel the w8a8 serving engine
+dispatches) on the local host — int8 wins on TPU MXUs (the paper's regime,
+and the regime the efficiency figures assume), while CPU hosts typically
+show < 1 (XLA's CPU int8 matmul is not VNNI-tuned); the row keeps the
+number honest either way.
+
 Output rows (CSV via benchmarks/run.py): table3/<metric> with the paper's
-reference value in `derived`.  Expected runtime: <5 s.
+reference value in `derived`.  Expected runtime: <15 s.
 """
 
 from __future__ import annotations
 
+import os
+import time
+
+import numpy as np
+
 from repro.core.dataflow import GemmShape
 from repro.core.generator import OpenGeMMConfig
 from repro.core.simulator import OpenGeMMSimulator
+from repro.tuning import env_truthy
 
 POWER_W = 0.0438          # paper Sec 4.4, (32,32,32) workload @ 200 MHz
 AREA_PNR_MM2 = 0.62       # paper Table 3
 AREA_CELL_MM2 = 0.531     # paper Sec 4.4
+
+# Host-measurement GeMM extent (square problem); REPRO_BENCH_FAST shrinks
+# it so `make bench-smoke` exercises the path without the full timing.
+_FAST = env_truthy(os.environ.get("REPRO_BENCH_FAST"))
+GEMM_MKN = 128 if _FAST else 512
+
+
+def measure_int8_speedup(n: int = GEMM_MKN, iters: int = 2 if _FAST else 5) -> float:
+    """Wall-clock f32-GeMM / w8a8-GeMM ratio on this host (>1: int8 wins)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    wq, sw = ref.quantize_ref(w, axis=0)
+
+    f32 = jax.jit(lambda a, b: ops.gemm(a, b, backend="xla"))
+    w8a8 = jax.jit(lambda a, bq, s: ops.gemm_w8a8(a, bq, s, backend="xla"))
+
+    def best(fn, *args):
+        fn(*args).block_until_ready()          # compile + warm
+        t = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn(*args).block_until_ready()
+            t = min(t, time.perf_counter() - t0)
+        return t
+
+    return best(f32, x, w) / best(w8a8, x, wq, sw.reshape(1, -1))
 
 
 def run():
@@ -52,6 +99,11 @@ def rows():
             "name": f"table3/{k}", "value": round(v, 3),
             "derived": f"paper={paper.get(k, 'n/a')}",
         })
+    out.append({
+        "name": "table3/int8_gemm_speedup_host",
+        "value": round(measure_int8_speedup(), 3),
+        "derived": "paper=int8 datapath assumed by 4.68 TOPS/W (>1 on MXU)",
+    })
     return out
 
 

@@ -1,57 +1,62 @@
-"""OpenGeMM int8 deployment mode: quantize a trained model's matmuls to the
-paper's P_A=P_B=8 / P_C=32 regime and measure the quality delta.
+"""OpenGeMM int8 deployment mode, end to end through `repro.quant`.
 
-The paper's accelerator is an int8 engine; this example shows the framework
-running the same architecture in float and in int8-GeMM mode (per-row
-activation scales, per-column weight scales, int32 accumulation — the exact
-kernel epilogue of kernels/gemm.py), comparing perplexity on held-out
-synthetic data.
+The paper's accelerator is an int8 engine (P_A = P_B = 8, P_C = 32); this
+example walks its deployment recipe on a smoke-scale model with no
+monkey-patching — the same subsystem the serving engine uses under
+``Engine(cfg, precision="w8a8")``:
+
+  1. calibrate activation scales over held-out batches (observers);
+  2. quantize the weights int8-resident once (`quantize_params`);
+  3. inspect where precision goes (`report.layer_error_rows`);
+  4. measure the end-to-end quality delta float vs w8a8 vs w8a8-calibrated.
 
 Run:  PYTHONPATH=src python examples/int8_deployment.py
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, quant
 from repro.data import SyntheticLMData
-from repro.kernels import ops, ref
 from repro.models import model as M
-
-
-def eval_loss(params, cfg, batches, quant=None):
-    # quant mode is routed through kernels.ops.linear by monkey-patched default
-    losses = []
-    for b in batches:
-        logits = M.forward(params, cfg, {k: jnp.asarray(v) for k, v in b.items()})
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        ll = jnp.take_along_axis(logp, jnp.asarray(b["labels"])[..., None], -1)
-        losses.append(float(-jnp.mean(ll)))
-    return float(np.mean(losses))
 
 
 def main():
     cfg = configs.get_smoke("qwen3-14b")
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     data = SyntheticLMData(cfg.vocab, batch=4, seq=64)
-    batches = [data.batch_at(i) for i in range(4)]
+    calib = [data.batch_at(i) for i in range(2)]        # calibration split
+    heldout = [data.batch_at(i) for i in range(2, 6)]   # evaluation split
 
-    f32 = eval_loss(params, cfg, batches)
+    # 1. calibrate: absmax observers over the calibration batches
+    table = quant.collect_scales(params, cfg, calib, observer="absmax")
+    print(f"calibrated {len(table)} activation sites "
+          f"({table.observer}, {table.batches} batches)")
 
-    # int8 weight quantization error per layer (the deployment transform):
-    w = params["blocks"]["sub0"]["mixer"]["wq"][0]
-    q, s = ref.quantize_ref(jnp.asarray(w, jnp.float32), axis=0)
-    werr = float(jnp.max(jnp.abs(ref.dequantize_ref(q, s) - w)))
-    print(f"per-column int8 weight quant: max abs err {werr:.5f}")
+    # 2. quantize once: int8 weights + f32 per-column scales, static
+    #    activation scales attached for the calibrated mode
+    qparams = quant.quantize_params(params, cfg=cfg, scales=table)
+    fb, qb = quant.weight_bytes(params), quant.weight_bytes(qparams)
+    print(f"weights: {fb / 2**20:.2f}MiB float -> {qb / 2**20:.2f}MiB "
+          f"int8-resident ({1 - qb / fb:.0%} smaller, "
+          f"{quant.quantized_leaf_count(qparams)} matrices)")
 
-    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
-    y_f = x @ w.astype(jnp.float32)
-    y_q = ops.linear(x, w.astype(jnp.float32), quant="int8", backend="interpret")
-    rel = float(jnp.linalg.norm(y_q - y_f) / jnp.linalg.norm(y_f))
-    print(f"int8 GeMM path rel err vs f32: {rel:.4f}")
-    print(f"f32 eval loss: {f32:.4f} (int8 path verified at op level; "
-          f"full-model int8 eval runs on TPU via ops.set_default_backend)")
+    # 3. per-layer quantization error (worst layers first)
+    rows = quant.layer_error_rows(params, qparams)
+    print("\nper-layer int8 weight error:")
+    print(quant.format_error_table(rows, top=8))
+
+    # 4. end-to-end quality delta on held-out batches
+    for mode in ("w8a8", "w8a8-calibrated"):
+        d = quant.quality_delta(params, qparams, cfg, heldout, mode=mode)
+        print(f"\n{mode}: NLL {d['float_nll']:.4f} (float) -> "
+              f"{d['quant_nll']:.4f} ({mode}), delta {d['delta_nll']:+.4f} "
+              f"({d['rel_delta']:+.2%})")
+
+    worst = rows[0]
+    print(f"\nworst-quantizing layer: {worst['path']} "
+          f"(rel err {worst['rel_err']:.4f}, "
+          f"column-scale spread {worst['scale_spread']:.1f}x)")
 
 
 if __name__ == "__main__":

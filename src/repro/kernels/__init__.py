@@ -2,8 +2,9 @@
 
   gemm            output-stationary tiled GeMM (the paper's core, on MXU)
   gemm_pipelined  explicit depth-D ring-buffer variant (D_stream knob)
-  quant           int8 row quantization
-  ops             jit'd public wrappers + backend dispatch
+  quant           int8 row quantization + the fused "w8a8" deployment GeMM
+  ops             jit'd public wrappers + backend dispatch (incl. the
+                  precision-mode hook consumed from repro.quant)
   registry        named kernel factories (backend -> Pallas specialization)
   ref             pure-jnp oracles
 
@@ -14,6 +15,7 @@ known (TM, TK, TN) for the problem, searched once and cached.
 from repro.kernels.ops import (
     gemm,
     gemm_int8_dequant,
+    gemm_w8a8,
     linear,
     quantize,
     set_default_backend,
@@ -37,6 +39,7 @@ __all__ = [
     "gemm",
     "tuned_gemm",
     "gemm_int8_dequant",
+    "gemm_w8a8",
     "linear",
     "quantize",
     "set_default_backend",

@@ -132,7 +132,9 @@ def gemm_int8_dequant(
         return ref.gemm_dequant_ref(a_q, b_q, scale_a, scale_b)
     M, K = a_q.shape
     _, N = b_q.shape
-    spec = spec or _dispatch_spec(CASE_STUDY, GemmShape(M, K, N), a_q.dtype, backend)
+    # Tuned separately from the plain int8 GeMM: the fused scale epilogue
+    # changes the write-back cost, so "dequant" is its own tuning key.
+    spec = spec or _dispatch_spec(CASE_STUDY, GemmShape(M, K, N), a_q.dtype, "dequant")
     ap, bp = _pad2(a_q, spec.tm, spec.tk), _pad2(b_q, spec.tk, spec.tn)
     sa = _pad2(scale_a, spec.tm, 1)
     sb = _pad2(scale_b, 1, spec.tn)
@@ -145,19 +147,90 @@ def quantize(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
     return ref.quantize_ref(x, axis=axis)
 
 
+def gemm_w8a8(
+    x: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    *,
+    act_scale: Optional[jax.Array] = None,
+    spec: Optional[TpuGemmSpec] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """The int8-resident-weight GeMM: float x (M, K), int8 w_q (K, N) with
+    f32 per-column scales -> f32 (M, N).
+
+    Activations quantize per-row on the fly (dynamic), or with the static
+    per-tensor `act_scale` when given (calibrated mode).  On TPU this is the
+    fused "w8a8" registry kernel (row quant in VMEM + dequant epilogue); the
+    xla path composes the jnp oracles.
+    """
+    backend = _resolve(backend)
+    M, K = x.shape
+    N = w_q.shape[-1]
+    w_scale = w_scale.reshape(1, -1)
+    if act_scale is not None:
+        s = jnp.asarray(act_scale, jnp.float32).reshape(())
+        xq = jnp.clip(
+            jnp.round(x.astype(jnp.float32) / s), -127, 127
+        ).astype(jnp.int8)
+        sx = jnp.broadcast_to(s, (M, 1))
+        if backend == "xla":
+            return ref.gemm_dequant_ref(xq, w_q, sx, w_scale)
+        return gemm_int8_dequant(xq, w_q, sx, w_scale, spec=spec, backend=backend)
+    if backend == "xla":
+        xq, sx = ref.quantize_ref(x, axis=-1)
+        return ref.gemm_dequant_ref(xq, w_q, sx, w_scale)
+    # dtype as the string "int8": the tuner cache key stringifies its dtype
+    # argument, and warmup pre-tunes under "int8" (autotune_for_serving) —
+    # passing the jnp.int8 class would silently miss every warmed entry.
+    spec = spec or _dispatch_spec(
+        CASE_STUDY, GemmShape(M, K, N), "int8", "w8a8")
+    xp = _pad2(x, spec.tm, spec.tk)
+    wp = _pad2(w_q, spec.tk, spec.tn)
+    sp = _pad2(w_scale, 1, spec.tn)
+    k = make_kernel("w8a8", spec, interpret=(backend == "interpret"))
+    return k(xp, wp, sp)[:M, :N]
+
+
+def _quant_mode():
+    """The precision-mode module, if anyone imported it (sys.modules peek:
+    a plain float `linear` call never pays for the quant package — the same
+    inertness rule as the tuner hook in `_dispatch_spec`)."""
+    return sys.modules.get("repro.quant.modes")
+
+
 def linear(
     x: jax.Array,
-    w: jax.Array,
+    w,
     *,
     quant: Optional[str] = None,
     backend: Optional[str] = None,
 ) -> jax.Array:
     """y = x @ w for arbitrary-rank x (..., K) and w (K, N).
 
-    quant="int8" runs the OpenGeMM int8 deployment path: activations are
-    row-quantized on the fly, weights column-quantized, and the kernel
-    dequantizes on write-back.
+    `w` is a float matrix or an int8-resident `quant.params.QuantTensor`
+    (pre-quantized weights + per-column scales: the serving deployment path —
+    no per-call weight quantization).
+
+    quant="int8" runs the OpenGeMM int8 deployment path on a float weight:
+    activations row-quantized on the fly, weights column-quantized per call,
+    and the kernel dequantizes on write-back.  quant=None defers to the
+    active precision mode (repro.quant.modes — trace-time dispatch);
+    quant="none" opts out of the mode and forces float (for numerically
+    sensitive projections, e.g. the SSM dt/gate paths).
     """
+    qmod = _quant_mode()
+    if qmod is not None and qmod.capturing():
+        qmod.capture(x, w)  # calibration tap (eager runs only; see calibrate)
+    qp = sys.modules.get("repro.quant.params")
+    if qp is not None and isinstance(w, qp.QuantTensor):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        act = w.act_scale if (qmod is not None and qmod.is_calibrated()) else None
+        out = gemm_w8a8(x2, w.q, w.scale, act_scale=act, backend=backend)
+        return out.astype(x.dtype).reshape(*lead, w.q.shape[-1])
+    if quant is None and qmod is not None:
+        quant = qmod.default_quant()
     lead = x.shape[:-1]
     K = x.shape[-1]
     resolved = _resolve(backend)

@@ -1,17 +1,25 @@
 """Symmetric int8 quantization kernels (the OpenGeMM deployment precision).
 
 Per-row absmax quantization: x (M, K) float -> (q int8, scale f32 (M, 1)).
-Tiled over M so arbitrarily tall activations stream through VMEM.
+Tiled over M so arbitrarily tall activations stream through VMEM; ragged M
+is padded to the tile grid and sliced back (the padding rows quantize to
+zeros and never leave this module).
+
+`make_w8a8_gemm` composes this with the fused dequant GeMM into the full
+w8a8 deployment kernel — float activations in, f32 out, weights
+int8-resident — registered as the "w8a8" variant in kernels/registry.py.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.generator import TpuGemmSpec
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -25,22 +33,50 @@ def _quant_kernel(x_ref, q_ref, s_ref):
 def quantize_rows(
     x: jax.Array, *, block_m: int = 256, interpret: bool = False
 ) -> Tuple[jax.Array, jax.Array]:
-    """Per-row symmetric int8 quantization; rows must divide into block_m."""
+    """Per-row symmetric int8 quantization; any M (ragged rows are padded to
+    the block grid and the outputs sliced back)."""
     M, K = x.shape
     bm = min(block_m, M)
-    assert M % bm == 0, (M, bm)
+    pad = (-M) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Mp = M + pad
     q, s = pl.pallas_call(
         _quant_kernel,
-        grid=(M // bm,),
+        grid=(Mp // bm,),
         in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((bm, K), lambda i: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((M, K), jnp.int8),
-            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, K), jnp.int8),
+            jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    if pad:
+        q, s = q[:M], s[:M]
     return q, s
+
+
+def make_w8a8_gemm(spec: TpuGemmSpec, *, interpret: bool = False) -> Callable:
+    """Generate the int8-resident-weight deployment GeMM for one design point.
+
+    gemm(a, b_q, sb) with a (M, K) float, b_q (K, N) int8, sb (1, N) f32
+    per-column weight scales -> (M, N) f32.  Activations are row-quantized
+    by the Pallas quantization kernel above, then the fused dequant GeMM
+    (kernels/gemm.py) applies both scale sets on write-back.  Operands must
+    be pre-padded to the tile grid (ops.py pads, as for every variant).
+    """
+    from repro.kernels.gemm import make_dequant_gemm
+
+    dequant = make_dequant_gemm(spec, interpret=interpret)
+    quant = functools.partial(
+        quantize_rows, block_m=spec.tm, interpret=interpret)
+
+    def gemm(a: jax.Array, b_q: jax.Array, sb: jax.Array) -> jax.Array:
+        a_q, sa = quant(a)
+        return dequant(a_q, b_q, sa, sb)
+
+    return gemm

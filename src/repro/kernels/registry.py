@@ -21,6 +21,7 @@ from typing import Callable, Dict, Tuple
 from repro.core.generator import TpuGemmSpec
 from repro.kernels.gemm import make_dequant_gemm, make_gemm
 from repro.kernels.gemm_pipelined import make_pipelined_gemm
+from repro.kernels.quant import make_w8a8_gemm
 
 KernelFactory = Callable[..., Callable]
 
@@ -64,3 +65,6 @@ def make_kernel(name: str, spec: TpuGemmSpec, *, interpret: bool = False) -> Cal
 register_kernel("pallas", make_gemm)
 register_kernel("pipelined", make_pipelined_gemm)
 register_kernel("dequant", make_dequant_gemm)
+# The int8 deployment path end to end: float activations row-quantized in
+# VMEM, int8 x int8 -> int32 GeMM, fused dequant epilogue (quant.py).
+register_kernel("w8a8", make_w8a8_gemm)

@@ -12,6 +12,10 @@ EXPERIMENTS.md §Serving for the mechanism table and measured speedups.
 ``--compare-prefill`` additionally times the legacy token-by-token prefill
 loop (decode steps over a padded batch) against the engine's chunked prefill
 on the same prompts and prints the wall-clock speedup.
+
+``--precision w8a8`` serves through the paper's int8 deployment datapath:
+warmup calibrates/quantizes the weights int8-resident and compiles int8
+decode/prefill steps (see repro.quant and EXPERIMENTS.md §Quantization).
 """
 
 from __future__ import annotations
@@ -139,6 +143,11 @@ def main(argv=None):
                     help="pre-tune this model's GeMM tiles before serving")
     ap.add_argument("--tune-mode", default="analytic",
                     choices=["analytic", "wallclock"])
+    ap.add_argument("--precision", default="float",
+                    choices=["float", "w8a8", "w8a8-calibrated"],
+                    help="execution precision: w8a8 quantizes weights "
+                         "int8-resident at warmup and serves through the "
+                         "paper's int8 datapath (repro.quant)")
     ap.add_argument("--compare-prefill", action="store_true",
                     help="time legacy token-by-token prefill vs the engine")
     args = ap.parse_args(argv)
@@ -152,6 +161,7 @@ def main(argv=None):
         num_blocks=args.kv_blocks or None,
         max_chunk=args.chunk,
         autotune=args.autotune, tune_mode=args.tune_mode,
+        precision=args.precision,
         verbose=True,
     )
     t0 = time.time()
@@ -172,8 +182,8 @@ def main(argv=None):
     gen = np.stack([results[rid] for rid in sorted(results)])
     pool_tokens = (eng.num_blocks - 1) * eng.block_size
     dense_tokens = slots * max_seq
-    print(f"arch={cfg.name} slots={slots} warmup {t_warm*1e3:.0f}ms "
-          f"serve {t_serve*1e3:.0f}ms")
+    print(f"arch={cfg.name} slots={slots} precision={args.precision} "
+          f"warmup {t_warm*1e3:.0f}ms serve {t_serve*1e3:.0f}ms")
     print(f"engine: {eng.metrics.summary()}")
     print(f"kv pool: {eng.num_blocks - 1} blocks x {eng.block_size} tokens "
           f"= {pool_tokens} tokens shared "

@@ -133,6 +133,12 @@ def forward(
 
 
 def _unembed(x, params, cfg):
+    # "head_q" is the int8-resident copy of the tied embedding table that
+    # quant.quantize_params adds for serving: without it, a tied-head model
+    # in w8a8 mode would re-quantize the (vocab x d) table every decode step.
+    if "head_q" in params:
+        logits = layers.dense(x, params["head_q"])
+        return shard(logits, "batch", "seq", "vocab")
     if cfg.tie_embeddings:
         logits = layers.unembed(x, params["embed"])
     else:
@@ -270,10 +276,7 @@ def decode_step(
         )
 
     x = blocks._norm(x, params["final_norm"], cfg)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(x, params["embed"])
-    else:
-        logits = layers.dense(x, params["head"])
+    logits = _unembed(x, params, cfg)
     new_state = DecodeState(
         caches=new_caches, cross_caches=state.cross_caches, index=state.index + 1
     )

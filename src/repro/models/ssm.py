@@ -53,10 +53,14 @@ def _mamba_inner(x_in, p, cfg):
     """Shared projections: returns (dA, dBx, C, x_conv) per token."""
     mc = cfg.mamba
     dtr = mc.resolved_dt_rank(cfg.d_model)
-    xdb = layers.dense(x_in, p["w_x"]).astype(jnp.float32)
+    # quant="none": the dt/B/C projections feed exp() in the selective-scan
+    # discretization — int8 noise there compounds through the recurrence, so
+    # they opt out of the w8a8 precision mode (quant/modes.py).
+    xdb = layers.dense(x_in, p["w_x"], quant="none").astype(jnp.float32)
     dt, B_ssm, C_ssm = jnp.split(xdb, [dtr, dtr + mc.d_state], axis=-1)
     dt = jax.nn.softplus(
-        layers.dense(dt.astype(x_in.dtype), p["w_dt"]).astype(jnp.float32) + p["b_dt"]
+        layers.dense(dt.astype(x_in.dtype), p["w_dt"], quant="none").astype(jnp.float32)
+        + p["b_dt"]
     )  # (..., di)
     A = -jnp.exp(p["A_log"])  # (di, ds)
     dA = jnp.exp(dt[..., None] * A)                     # (..., di, ds)
@@ -243,8 +247,10 @@ def mlstm_block(x, p, cfg, *, state: Optional[MLSTMState] = None):
         return layers.dense(xm, w).reshape(B, S, H, hd).astype(jnp.float32)
 
     q, k, v = heads(p["w_q"]), heads(p["w_k"]) * hd ** -0.5, heads(p["w_v"])
-    i_pre = (layers.dense(xm, p["w_i"]).astype(jnp.float32) + p["b_i"])  # (B,S,H)
-    f_pre = (layers.dense(xm, p["w_f"]).astype(jnp.float32) + p["b_f"])
+    # quant="none": gate pre-activations feed log-space exponentials in the
+    # recurrence — they stay float under the w8a8 precision mode.
+    i_pre = (layers.dense(xm, p["w_i"], quant="none").astype(jnp.float32) + p["b_i"])
+    f_pre = (layers.dense(xm, p["w_f"], quant="none").astype(jnp.float32) + p["b_f"])
 
     if state is None:
         st = MLSTMState(
@@ -369,7 +375,10 @@ def slstm_block(x, p, cfg, *, state: Optional[SLSTMState] = None):
     H = cfg.n_heads
     hd = d // H
     pre = {
-        g: layers.dense(x, p[f"w_{g}"]).reshape(B, S, H, hd).astype(jnp.float32)
+        # quant="none": LSTM gate projections (exponential/gated recurrence
+        # inputs) stay float under the w8a8 precision mode.
+        g: layers.dense(x, p[f"w_{g}"], quant="none").reshape(B, S, H, hd)
+        .astype(jnp.float32)
         for g in "izfo"
     }
     if state is None:

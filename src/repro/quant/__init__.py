@@ -1,0 +1,66 @@
+"""repro.quant: end-to-end int8 (w8a8) quantization — the paper's deployment
+precision as a first-class execution mode.
+
+  modes      precision-mode switch ("float" / "w8a8" / "w8a8-calibrated")
+             consumed by kernels/ops.py::linear at trace time
+  params     QuantTensor + quantize_params: int8-resident weights with
+             per-column scales, attached once at load
+  calibrate  activation observers (absmax / moving-average / percentile)
+             over calibration batches -> static activation-scale table
+  report     per-layer quantization error + end-to-end quality delta
+
+Typical deployment (the serving engine does exactly this under
+``Engine(cfg, precision="w8a8")`` — see serving/engine.py):
+
+    from repro import quant
+    table = quant.collect_scales(params, cfg, batches)     # optional
+    qparams = quant.quantize_params(params, cfg=cfg, scales=table)
+    with quant.precision("w8a8-calibrated"):
+        logits = forward(qparams, cfg, batch)              # int8 GeMMs
+
+`modes` and `params` load eagerly (they are what kernels/ops.py probes via
+sys.modules); `calibrate`/`report` pull in the model layer and stay lazy.
+"""
+
+from repro.quant import modes  # noqa: F401
+from repro.quant.modes import (  # noqa: F401
+    MODES,
+    get_mode,
+    precision,
+    set_mode,
+)
+from repro.quant.params import (  # noqa: F401
+    QUANT_KEYS,
+    QuantTensor,
+    dequantize_params,
+    quantize_leaf,
+    quantize_params,
+    quantized_leaf_count,
+    weight_bytes,
+)
+
+# NB: "calibrate"/"report" resolve to the submodules (import machinery would
+# overwrite a same-named function attribute on first import anyway); the
+# calibration *function* is exported as `collect_scales`.
+_LAZY = {
+    "calibrate": ("repro.quant.calibrate", None),
+    "collect_scales": ("repro.quant.calibrate", "calibrate"),
+    "synthetic_batches": ("repro.quant.calibrate", "synthetic_batches"),
+    "ScaleTable": ("repro.quant.calibrate", "ScaleTable"),
+    "make_observer": ("repro.quant.calibrate", "make_observer"),
+    "layer_error_rows": ("repro.quant.report", "layer_error_rows"),
+    "format_error_table": ("repro.quant.report", "format_error_table"),
+    "quality_delta": ("repro.quant.report", "quality_delta"),
+    "eval_nll": ("repro.quant.report", "eval_nll"),
+    "report": ("repro.quant.report", None),
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        mod = importlib.import_module(module)
+        return mod if attr is None else getattr(mod, attr)
+    raise AttributeError(f"module 'repro.quant' has no attribute {name!r}")

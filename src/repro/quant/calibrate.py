@@ -1,0 +1,266 @@
+"""Activation calibration: observers over calibration batches -> scale table.
+
+Static ("w8a8-calibrated") activation quantization needs one number per
+projection: the scale that maps the layer's typical activation range onto
+[-127, 127].  This module collects those numbers by running the model over a
+few calibration batches with the `quant.modes` activation tap installed:
+
+  * the forward pass is replayed *eagerly, group by group* (a python loop
+    over `cfg.n_groups` instead of the model's `lax.scan`), so every
+    `ops.linear` call sees concrete arrays and a concrete weight object;
+  * each group's sliced weight leaves are registered by python identity
+    (`id(w) -> "blocks.{g}.sub{i}....`"), so a captured (activation, weight)
+    pair maps to its exact parameter path with no call-order assumptions;
+  * per-path `Observer`s reduce the stream of activations to a scale.
+
+Observers (per-tensor and per-channel variants of each):
+
+  absmax           running max of |x| — tightest coverage, outlier-sensitive
+  moving_average   EMA of the per-batch absmax (momentum m): smooths
+                   batch-to-batch outliers, the classic PTQ default
+  percentile       running max of the per-batch |x| percentile (e.g. 99.9):
+                   clips the outlier tail for tighter scales
+
+Calls that happen inside traced regions (e.g. the mamba dt projection under
+its chunked scan) deliver tracers to the tap and are skipped — those
+projections keep dynamic quantization (or stay float; see models/ssm.py).
+
+Determinism: observers are pure numpy over a deterministic capture order, so
+the same params + batches always produce bit-identical tables (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import modes
+
+EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# observers
+# ---------------------------------------------------------------------------
+
+class Observer:
+    """Reduces a stream of |activation| matrices to quantization scales."""
+
+    def observe(self, a: np.ndarray) -> None:  # a = |x| as (rows, K) f32
+        raise NotImplementedError
+
+    def end_batch(self) -> None:
+        """Batch boundary hook (only the moving-average observer cares)."""
+
+    def stat(self, per_channel: bool = False) -> np.ndarray:
+        raise NotImplementedError
+
+    def scale(self, per_channel: bool = False) -> np.ndarray:
+        return np.maximum(self.stat(per_channel), EPS) / 127.0
+
+
+class AbsmaxObserver(Observer):
+    def __init__(self):
+        self._ch: Optional[np.ndarray] = None
+
+    def observe(self, a: np.ndarray) -> None:
+        ch = a.max(axis=0)
+        self._ch = ch if self._ch is None else np.maximum(self._ch, ch)
+
+    def stat(self, per_channel: bool = False) -> np.ndarray:
+        assert self._ch is not None, "observer saw no data"
+        return self._ch if per_channel else self._ch.max()
+
+
+class MovingAverageObserver(Observer):
+    """EMA of the per-batch absmax.  Within a batch the pending statistic is
+    a max (commutative — robust to capture-call ordering); the EMA applies
+    once per `end_batch`, so the result is deterministic for a given batch
+    sequence."""
+
+    def __init__(self, momentum: float = 0.9):
+        self.momentum = momentum
+        self._ema: Optional[np.ndarray] = None
+        self._pending: Optional[np.ndarray] = None
+
+    def observe(self, a: np.ndarray) -> None:
+        ch = a.max(axis=0)
+        self._pending = ch if self._pending is None else np.maximum(self._pending, ch)
+
+    def end_batch(self) -> None:
+        if self._pending is None:
+            return
+        if self._ema is None:
+            self._ema = self._pending
+        else:
+            m = self.momentum
+            self._ema = m * self._ema + (1.0 - m) * self._pending
+        self._pending = None
+
+    def stat(self, per_channel: bool = False) -> np.ndarray:
+        ema = self._ema if self._ema is not None else self._pending
+        assert ema is not None, "observer saw no data"
+        return ema if per_channel else ema.max()
+
+
+class PercentileObserver(Observer):
+    """Running max of the per-batch |x| percentile: clips the outlier tail.
+    (Max-of-per-batch-percentiles approximates the pooled percentile without
+    retaining every activation; exact for the 100th percentile.)"""
+
+    def __init__(self, percentile: float = 99.9):
+        self.percentile = percentile
+        self._val: Optional[float] = None
+        self._ch: Optional[np.ndarray] = None
+
+    def observe(self, a: np.ndarray) -> None:
+        v = float(np.percentile(a, self.percentile))
+        ch = np.percentile(a, self.percentile, axis=0)
+        self._val = v if self._val is None else max(self._val, v)
+        self._ch = ch if self._ch is None else np.maximum(self._ch, ch)
+
+    def stat(self, per_channel: bool = False) -> np.ndarray:
+        assert self._val is not None, "observer saw no data"
+        return self._ch if per_channel else np.float64(self._val)
+
+
+OBSERVERS = {
+    "absmax": AbsmaxObserver,
+    "moving_average": MovingAverageObserver,
+    "percentile": PercentileObserver,
+}
+
+
+def make_observer(name: str, **kwargs) -> Observer:
+    if name not in OBSERVERS:
+        raise ValueError(f"unknown observer {name!r}; known: {sorted(OBSERVERS)}")
+    return OBSERVERS[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# the scale table
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScaleTable:
+    """Per-site activation scales: `scales` (per-tensor, what the int8 GeMM
+    consumes) and `channel_scales` (per-channel, for outlier diagnosis in
+    quant/report.py).  Keys are dotted param paths, group-indexed for the
+    scanned blocks: "blocks.0.sub1.mixer.wq", "head", ..."""
+
+    scales: Dict[str, float]
+    channel_scales: Dict[str, np.ndarray]
+    observer: str
+    batches: int
+
+    def get(self, path: str, default=None):
+        return self.scales.get(path, default)
+
+    def __len__(self) -> int:
+        return len(self.scales)
+
+
+# ---------------------------------------------------------------------------
+# calibration run
+# ---------------------------------------------------------------------------
+
+def _register(idmap: Dict[int, str], prefix: str, tree: Any) -> None:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        name = ".".join(str(getattr(k, "key", k)) for k in path)
+        idmap[id(leaf)] = f"{prefix}.{name}" if name else prefix
+
+
+def _tokens_of(batch) -> jnp.ndarray:
+    if isinstance(batch, dict):
+        batch = batch["tokens"]
+    return jnp.asarray(np.asarray(batch, np.int32))
+
+
+def calibrate(
+    params,
+    cfg,
+    batches: Iterable,
+    *,
+    observer: str = "absmax",
+    **observer_kwargs,
+) -> ScaleTable:
+    """Collect per-layer activation scales over `batches` (each a (B, S)
+    token array or a dict with a "tokens" key).
+
+    Runs the decoder forward eagerly group-by-group with the activation tap
+    installed; supported for the decoder families (dense/moe/hybrid/ssm) —
+    the same set the paged serving engine supports.
+    """
+    from repro.models import blocks, layers  # deferred: keeps import cheap
+
+    if cfg.family in ("encdec", "vlm"):
+        raise NotImplementedError(
+            f"calibration not wired for family {cfg.family!r}")
+
+    observers: Dict[str, Observer] = {}
+    idmap: Dict[int, str] = {}
+
+    def tap(x, w):
+        if isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
+            return  # inside a traced region (scan/checkpoint body): skip
+        path = idmap.get(id(w))
+        if path is None:
+            return  # unregistered weight (bias-less helper matmuls etc.)
+        obs = observers.get(path)
+        if obs is None:
+            obs = observers[path] = make_observer(observer, **observer_kwargs)
+        a = np.abs(np.asarray(x, np.float32)).reshape(-1, x.shape[-1])
+        obs.observe(a)
+
+    n_batches = 0
+    with modes.precision("float"), modes.activation_capture(tap):
+        for batch in batches:
+            tokens = _tokens_of(batch)
+            B, S = tokens.shape
+            x = layers.embed(tokens, params["embed"])
+            if cfg.tie_embeddings:
+                x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+            positions = jnp.arange(S)
+            for g in range(cfg.n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[g], params["blocks"])
+                idmap.clear()
+                _register(idmap, f"blocks.{g}", gp)
+                x, _ = blocks.apply_group(
+                    x, gp, cfg, positions=positions, causal=True)
+            x = blocks._norm(x, params["final_norm"], cfg)
+            # Head site: feed the tap directly — the observer only reads the
+            # *input* activations, so running the (B*S, d) x (d, vocab)
+            # unembedding just to trigger the linear hook would materialize
+            # (and discard) the full logits tensor per calibration batch.
+            idmap.clear()
+            head = params["embed"] if cfg.tie_embeddings else params["head"]
+            idmap[id(head)] = "head"
+            tap(x, head)
+            n_batches += 1
+            for obs in observers.values():
+                obs.end_batch()
+
+    return ScaleTable(
+        scales={k: float(o.scale()) for k, o in sorted(observers.items())},
+        channel_scales={
+            k: np.asarray(o.scale(per_channel=True), np.float64)
+            for k, o in sorted(observers.items())
+        },
+        observer=observer,
+        batches=n_batches,
+    )
+
+
+def synthetic_batches(
+    cfg, *, n: int = 2, batch: int = 2, seq: int = 32, seed: int = 0,
+) -> List[np.ndarray]:
+    """Deterministic synthetic token batches for calibration smoke paths
+    (real deployments pass held-out data)."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(batch, seq)).astype(np.int32)
+            for _ in range(n)]

@@ -1,0 +1,115 @@
+"""Precision modes: the process-wide execution-precision switch.
+
+The paper's accelerator is an int8 engine (P_A = P_B = 8, P_C = 32); this
+module makes that deployment precision a first-class *mode* of the framework
+instead of a per-call kwarg or a monkey-patched default:
+
+  "float"             every `ops.linear` runs in the model dtype (default)
+  "w8a8"              int8 weights x int8 activations, activations quantized
+                      per-row on the fly (dynamic quantization)
+  "w8a8-calibrated"   as w8a8, but activations use the static per-tensor
+                      scales collected by `quant.calibrate` (attached to the
+                      weights by `quant.params.quantize_params`)
+
+`kernels/ops.py::linear` consults the active mode on every call it traces, so
+`with precision("w8a8"): ...` flips the whole model — attention projections,
+FFNs, the LM head — without touching model code.
+
+IMPORTANT — trace-time semantics: like every python-level switch in jax, the
+mode is read when a function is *traced*, not when its compiled executable
+runs.  A jitted step compiled under "w8a8" stays w8a8 forever; re-entering
+"float" later does not re-trace it.  The serving engine therefore traces its
+decode/prefill steps inside the precision context during warmup (one engine,
+one precision), and tests that flip modes must not reuse jit caches across
+modes.
+
+The activation-capture hook is the calibration tap: `quant.calibrate` installs
+a callback that receives every (activation, weight) pair `linear` sees while
+running eagerly, which is how observers collect per-layer statistics without
+the model threading any state through its forward pass.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+MODES = ("float", "w8a8", "w8a8-calibrated")
+
+_state = threading.local()
+
+
+def _get() -> str:
+    return getattr(_state, "mode", "float")
+
+
+def get_mode() -> str:
+    """The active precision mode ("float" unless something set one)."""
+    return _get()
+
+
+def set_mode(mode: str) -> str:
+    """Set the precision mode; returns the previous one (for restoring)."""
+    if mode not in MODES:
+        raise ValueError(f"unknown precision mode {mode!r}; known: {MODES}")
+    prev = _get()
+    _state.mode = mode
+    return prev
+
+
+@contextlib.contextmanager
+def precision(mode: str):
+    """Run a block under a precision mode, restoring the previous mode on
+    exit (exception-safe, re-entrant)."""
+    prev = set_mode(mode)
+    try:
+        yield
+    finally:
+        _state.mode = prev
+
+
+def default_quant() -> Optional[str]:
+    """The `quant=` default `ops.linear` should assume under the active mode
+    (None in float mode; "int8" in the w8a8 modes).  Callers opt *out* of the
+    mode by passing an explicit quant="none" (e.g. numerically sensitive
+    SSM gate/dt projections)."""
+    return "int8" if _get() != "float" else None
+
+
+def is_calibrated() -> bool:
+    """True when static (calibrated) activation scales should be preferred
+    over dynamic per-row quantization."""
+    return _get() == "w8a8-calibrated"
+
+
+# ---------------------------------------------------------------------------
+# calibration tap
+# ---------------------------------------------------------------------------
+
+_capture_fn: Optional[Callable] = None
+
+
+def capturing() -> bool:
+    return _capture_fn is not None
+
+
+def capture(x, w) -> None:
+    """Feed one (activation, weight) pair to the installed observer hook."""
+    if _capture_fn is not None:
+        _capture_fn(x, w)
+
+
+@contextlib.contextmanager
+def activation_capture(fn: Callable):
+    """Install `fn(x, w)` as the linear-call tap for the duration of the
+    block.  Not re-entrant by design: nested calibrations would silently
+    cross-contaminate observers."""
+    global _capture_fn
+    if _capture_fn is not None:
+        raise RuntimeError("activation capture already active")
+    _capture_fn = fn
+    try:
+        yield
+    finally:
+        _capture_fn = None

@@ -1,0 +1,185 @@
+"""Int8-resident model parameters: quantize weights once at load time.
+
+The paper's deployment story quantizes *weights ahead of time* (they are
+static) and activations on the fly (they are not).  `quantize_params` walks a
+model's params pytree and replaces every eligible projection matrix with a
+`QuantTensor` — int8 values plus float32 per-output-column scales — so:
+
+  * weight memory drops ~4x for the quantized matrices (int8 vs f32, the
+    per-column scale rows are noise), and
+  * the serving hot path never re-quantizes weights: `ops.linear` sees the
+    `QuantTensor` and goes straight to the int8 GeMM with the stored scales,
+    where the on-the-fly `quant="int8"` path pays a full weight pass per call.
+
+`QuantTensor` is a NamedTuple, hence a pytree node: stacked group weights
+(G, K, N) quantize to q (G, K, N) int8 + scale (G, 1, N), and `jax.lax.scan`
+over the block groups slices both leaves in lock step — the scanned model
+code needs no changes.
+
+Eligibility is by leaf name (`QUANT_KEYS`): the attention q/k/v/o projections,
+the MLP matrices, the mamba in/out projections and the LM head.  Embedding
+tables stay float (they are gathered, not multiplied), as do norms, biases,
+convs and the SSM dt/gate projections (numerically sensitive recurrence
+inputs — see models/ssm.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+# Leaf names that quantize well and sit on the serving hot path.
+QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",                 # attention projections
+    "w_gate", "w_up", "w_down",             # MLP (swiglu / gelu) + mLSTM up/down
+    "w_in", "w_out",                        # mamba in/out projections
+    "w_q", "w_k", "w_v",                    # mLSTM q/k/v projections
+    "w_ff_up", "w_ff_down",                 # sLSTM GLU feed-forward
+    "head",                                 # untied LM head
+    "projector",                            # VLM vision projector
+})
+
+
+class QuantTensor(NamedTuple):
+    """An int8-resident weight: q int8 (..., K, N), scale f32 (..., 1, N),
+    and optionally a static per-tensor activation scale (..., 1, 1) from
+    calibration (consumed only in "w8a8-calibrated" mode)."""
+
+    q: jax.Array
+    scale: jax.Array
+    act_scale: Optional[jax.Array] = None
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def nbytes(self) -> int:
+        n = self.q.size + 4 * self.scale.size
+        if self.act_scale is not None:
+            n += 4 * self.act_scale.size
+        return n
+
+
+def quantize_leaf(w: jax.Array, act_scale=None) -> QuantTensor:
+    """Per-output-column symmetric int8 quantization of one weight matrix
+    (axis=-2 is the contraction axis, matching y = x @ w)."""
+    q, s = ref.quantize_ref(jnp.asarray(w, jnp.float32), axis=-2)
+    if act_scale is not None:
+        act_scale = jnp.asarray(act_scale, jnp.float32)
+    return QuantTensor(q=q, scale=s, act_scale=act_scale)
+
+
+def dequantize_leaf(t: QuantTensor) -> jax.Array:
+    return t.q.astype(jnp.float32) * t.scale
+
+
+def _stacked_act_scale(scales, path: str, groups: int):
+    """Assemble the (G, 1, 1) static activation scale for a stacked group
+    leaf from the per-group calibration entries "blocks.{g}.{path}".  All
+    groups must be present (a partially calibrated leaf falls back to
+    dynamic quantization)."""
+    vals = []
+    for g in range(groups):
+        v = scales.get(f"blocks.{g}.{path}")
+        if v is None:
+            return None
+        vals.append(float(v))
+    return jnp.asarray(vals, jnp.float32).reshape(groups, 1, 1)
+
+
+def quantize_params(
+    params: Dict[str, Any],
+    *,
+    cfg=None,
+    scales=None,
+    keys: frozenset = QUANT_KEYS,
+    tied_head: bool = True,
+) -> Dict[str, Any]:
+    """Return a copy of `params` with every eligible weight int8-resident.
+
+    `scales` is an optional `calibrate.ScaleTable` (or plain dict of
+    per-tensor activation scales); matching entries are attached as static
+    `act_scale`s for "w8a8-calibrated" mode.
+
+    With `cfg.tie_embeddings` and `tied_head=True`, an int8 copy of the
+    transposed embedding table is added under "head_q" so tied-head models
+    do not re-quantize the (vocab x d) unembedding every decode step — the
+    float table itself stays (it is gathered by the embedding lookup).
+    """
+    table = getattr(scales, "scales", scales) or {}
+
+    def walk(tree, path, keys=keys):
+        if isinstance(tree, dict):
+            # MoE expert FFNs reuse the MLP leaf names but run through the
+            # stacked-expert einsum (models/moe.py), not ops.linear — a
+            # router sibling marks the dict; its weights stay float.
+            if "router" in tree:
+                keys = frozenset()
+            return {k: walk(v, path + (k,), keys) for k, v in tree.items()}
+        if isinstance(tree, QuantTensor):  # already quantized: idempotent
+            return tree
+        name = path[-1] if path else ""
+        if (
+            name in keys
+            and hasattr(tree, "ndim")
+            and tree.ndim >= 2
+            and path[0] != "embed"
+        ):
+            if path[0] == "blocks" and tree.ndim >= 3:
+                sub = ".".join(path[1:])
+                act = _stacked_act_scale(table, sub, tree.shape[0])
+            else:
+                v = table.get(".".join(path))
+                act = None if v is None else jnp.float32(v)
+            return quantize_leaf(tree, act_scale=act)
+        return tree
+
+    out = walk(params, ())
+    if cfg is not None and getattr(cfg, "tie_embeddings", False) and tied_head:
+        v = table.get("head")
+        act = None if v is None else jnp.float32(v)
+        out["head_q"] = quantize_leaf(
+            jnp.asarray(params["embed"], jnp.float32).T, act_scale=act)
+    return out
+
+
+def dequantize_params(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Float reconstruction of a quantized pytree ("head_q" dropped — the
+    float embedding table is still present and authoritative)."""
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items() if k != "head_q"}
+        if isinstance(tree, QuantTensor):
+            return dequantize_leaf(tree)
+        return tree
+
+    return walk(params)
+
+
+def weight_bytes(params: Dict[str, Any]) -> int:
+    """Total parameter bytes, counting QuantTensors at their packed size."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda t: isinstance(t, QuantTensor)
+    ):
+        if isinstance(leaf, QuantTensor):
+            total += leaf.nbytes
+        else:
+            total += np.dtype(leaf.dtype).itemsize * leaf.size
+    return total
+
+
+def quantized_leaf_count(params: Dict[str, Any]) -> int:
+    return sum(
+        isinstance(l, QuantTensor)
+        for l in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda t: isinstance(t, QuantTensor)
+        )
+    )

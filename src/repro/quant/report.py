@@ -1,0 +1,122 @@
+"""Quantization reporting: per-layer weight error + end-to-end quality delta.
+
+Two questions every int8 deployment has to answer before traffic:
+
+  1. *Where* does precision go?  `layer_error_rows` compares each
+     int8-resident weight against its float original (relative Frobenius
+     error, max abs error, column-scale spread) so outlier layers are
+     visible per parameter path.
+  2. *How much* does it cost end to end?  `quality_delta` evaluates the same
+     held-out batches in float and in a w8a8 mode and reports the NLL delta
+     — the number the acceptance gate and EXPERIMENTS.md quote.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import modes
+from repro.quant.params import QuantTensor, dequantize_leaf
+
+
+# ---------------------------------------------------------------------------
+# per-layer weight error
+# ---------------------------------------------------------------------------
+
+def layer_error_rows(params_float, params_quant) -> List[Dict[str, Any]]:
+    """One row per int8-resident weight: path, shape, relative Frobenius
+    error and max abs error of dequantize(quantize(w)) vs w, plus the
+    per-column scale spread (max/median — a large ratio flags outlier
+    columns that would benefit from per-channel activation treatment)."""
+
+    rows: List[Dict[str, Any]] = []
+
+    def walk(f_tree, q_tree, path):
+        if isinstance(q_tree, dict):
+            for k, qv in q_tree.items():
+                walk(f_tree.get(k) if isinstance(f_tree, dict) else None,
+                     qv, path + (k,))
+            return
+        if not isinstance(q_tree, QuantTensor):
+            return
+        if f_tree is None and path == ("head_q",):
+            f_tree = jnp.asarray(params_float["embed"], jnp.float32).T
+        if f_tree is None:
+            return
+        w = np.asarray(f_tree, np.float32)
+        deq = np.asarray(dequantize_leaf(q_tree), np.float32)
+        scales = np.asarray(q_tree.scale, np.float32)
+        denom = float(np.linalg.norm(w)) or 1.0
+        rows.append({
+            "path": ".".join(path),
+            "shape": tuple(q_tree.q.shape),
+            "rel_err": float(np.linalg.norm(deq - w)) / denom,
+            "max_abs_err": float(np.max(np.abs(deq - w))),
+            "scale_spread": float(scales.max() / max(np.median(scales), 1e-12)),
+            "calibrated": q_tree.act_scale is not None,
+        })
+
+    walk(params_float, params_quant, ())
+    rows.sort(key=lambda r: -r["rel_err"])
+    return rows
+
+
+def format_error_table(rows: List[Dict[str, Any]], *, top: int = 0) -> str:
+    """Fixed-width table of `layer_error_rows` output (worst layers first)."""
+    shown = rows[:top] if top else rows
+    width = max([len(r["path"]) for r in shown] + [5])
+    lines = [f"{'layer':<{width}}  {'shape':>18}  {'rel_err':>9}  "
+             f"{'max_abs':>9}  {'spread':>7}  calib"]
+    for r in shown:
+        lines.append(
+            f"{r['path']:<{width}}  {str(r['shape']):>18}  "
+            f"{r['rel_err']:>9.5f}  {r['max_abs_err']:>9.5f}  "
+            f"{r['scale_spread']:>7.2f}  {'yes' if r['calibrated'] else 'no'}"
+        )
+    if top and len(rows) > top:
+        lines.append(f"... {len(rows) - top} more layers")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end quality delta
+# ---------------------------------------------------------------------------
+
+def eval_nll(params, cfg, batches: Iterable, *, mode: str = "float") -> float:
+    """Mean next-token NLL over batches, evaluated under a precision mode.
+
+    Traces fresh each call (no jit cache): the precision mode must bind at
+    trace time, and sharing compiled steps across modes would silently
+    evaluate the wrong precision (see quant/modes.py)."""
+    from repro.models import model as M
+
+    losses = []
+    with modes.precision(mode):
+        for b in batches:
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            logits = M.forward(params, cfg, b)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)
+            losses.append(float(-jnp.mean(ll)))
+    return float(np.mean(losses))
+
+
+def quality_delta(
+    params_float, params_quant, cfg, batches, *, mode: str = "w8a8",
+) -> Dict[str, float]:
+    """Float-vs-quantized NLL on the same batches: the end-to-end cost of
+    the int8 deployment.  `batches`: dicts with "tokens" and "labels"."""
+    batches = list(batches)
+    f = eval_nll(params_float, cfg, batches, mode="float")
+    q = eval_nll(params_quant, cfg, batches, mode=mode)
+    return {
+        "float_nll": f,
+        "quant_nll": q,
+        "delta_nll": q - f,
+        "rel_delta": (q - f) / max(abs(f), 1e-12),
+        "mode": mode,
+    }

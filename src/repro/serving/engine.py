@@ -6,7 +6,11 @@ Maps the paper's three utilization mechanisms onto the request path:
     the XLA compiler both run before traffic.  Every step the server can
     ever execute (the decode step, each power-of-two prefill-chunk bucket,
     the slot reset) is traced and compiled into the jit cache during
-    warmup, so no request ever pays a compile.
+    warmup, so no request ever pays a compile.  Pre-loading covers
+    *precision* too: ``Engine(cfg, precision="w8a8")`` calibrates (for the
+    calibrated mode), quantizes the weights int8-resident, and compiles
+    int8 decode/prefill steps — the paper's int8 deployment datapath, set
+    up entirely before traffic (repro.quant).
   * chunked prefill interleaved with decode — **input pre-fetching with
     output buffering**: C prompt tokens stream through one step while
     decode batches drain between chunks; prefill work is proportional to
@@ -88,16 +92,25 @@ def serving_gemm_shapes(cfg, *, slots: int, chunks: Optional[List[int]] = None
 
 def autotune_for_serving(cfg, *, slots: int, mode: str = "analytic",
                          chunks: Optional[List[int]] = None,
+                         dtype: Optional[str] = None,
+                         backend: str = "pallas",
                          verbose: bool = True) -> None:
-    """Warm the tuner cache for this model's shapes and enable tuned dispatch."""
+    """Warm the tuner cache for this model's shapes and enable tuned dispatch.
+
+    `dtype`/`backend` select the candidate space: a w8a8 engine tunes int8
+    tiles for the fused "w8a8" kernel — a *separate* search from the float
+    tiles (int8 packs 32 sublanes and twice the tile per VMEM byte, so the
+    winners differ; see tuning/candidates.py)."""
     from repro import tuning
 
     tuner = tuning.Autotuner(mode=mode)
     tuning.set_tuner(tuner)
     shapes = serving_gemm_shapes(cfg, slots=slots, chunks=chunks)
+    dtype = dtype or cfg.dtype
     if verbose:
-        print(f"autotune[{mode}]: {len(shapes)} GeMM shapes for {cfg.name}")
-    for r, s in zip(tuner.warmup(shapes, dtype=cfg.dtype), shapes):
+        print(f"autotune[{mode}]: {len(shapes)} GeMM shapes for {cfg.name} "
+              f"({dtype}/{backend})")
+    for r, s in zip(tuner.warmup(shapes, dtype=dtype, backend=backend), shapes):
         if verbose:
             hit = "cache" if r.from_cache else r.source
             print(f"  {s.M}x{s.K}x{s.N}: tile=({r.spec.tm},{r.spec.tk},"
@@ -128,6 +141,10 @@ class EngineMetrics:
     decode_time_s: float = 0.0    # wall clock spent in decode ticks only
     aot_steps: int = 0            # executables compiled during warmup
     cold_compiles: int = 0        # steps that missed the warmup cache
+    precision: str = "float"      # execution precision (quant/modes.py)
+    weight_bytes: int = 0         # resident param bytes (post-quantization)
+    weight_bytes_float: int = 0   # param bytes before quantization
+    calib_sites: int = 0          # activation sites calibrated in warmup
     peak_blocks_in_use: int = 0
     occupancy_sum: float = 0.0
     occupancy_samples: int = 0
@@ -149,7 +166,7 @@ class EngineMetrics:
         n = len(self.requests)
         ttft = np.mean([r.ttft_s for r in self.requests]) if n else 0.0
         lat = np.mean([r.latency_s for r in self.requests]) if n else 0.0
-        return (
+        out = (
             f"requests={n} prefill_chunks={self.prefill_chunks} "
             f"prefill_tokens={self.prefill_tokens} "
             f"decode_steps={self.decode_steps} "
@@ -159,6 +176,17 @@ class EngineMetrics:
             f"peak_blocks={self.peak_blocks_in_use} "
             f"warmed={self.aot_steps} cold_compiles={self.cold_compiles}"
         )
+        if self.precision != "float":
+            saved = (1.0 - self.weight_bytes / self.weight_bytes_float
+                     if self.weight_bytes_float else 0.0)
+            out += (
+                f" precision={self.precision} "
+                f"weights={self.weight_bytes / 2**20:.1f}MiB "
+                f"({saved:.0%} smaller)"
+            )
+            if self.calib_sites:
+                out += f" calib_sites={self.calib_sites}"
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -180,12 +208,23 @@ class Engine:
         max_chunk: int = 64,
         autotune: bool = False,
         tune_mode: str = "analytic",
+        precision: str = "float",
+        calib_batches=None,
         max_queue: Optional[int] = None,
         seed: int = 0,
         verbose: bool = False,
     ):
         from repro.launch import steps as steps_lib
 
+        if precision != "float":
+            from repro.quant import modes as _qmodes
+
+            if precision not in _qmodes.MODES:
+                raise ValueError(
+                    f"unknown precision {precision!r}; known: {_qmodes.MODES}")
+        self.precision = precision
+        self._calib_batches = calib_batches
+        self._seed = seed
         self.cfg = cfg
         self.params = (params if params is not None
                        else M.init_model(jax.random.PRNGKey(seed), cfg))
@@ -238,34 +277,92 @@ class Engine:
         time then always dispatches through jit's C++ fast path.  An AOT
         ``.lower().compile()`` executable would also pre-compile, but its
         Python-side call path re-validates the params pytree per call
-        (measured ~4 ms/step on CPU, double the decode step itself)."""
+        (measured ~4 ms/step on CPU, double the decode step itself).
+
+        With ``precision != "float"`` warmup additionally covers the paper's
+        deployment precision: (optionally) calibrate activation scales,
+        quantize the weights int8-resident *once*, and trace every step
+        inside the precision context — so the compiled executables are int8
+        end to end and serving never quantizes a weight again."""
         buckets = chunk_buckets(self.max_chunk)
         if self.autotune:
+            w8a8 = self.precision != "float"
             autotune_for_serving(
                 self.cfg, slots=self.slots, mode=self.tune_mode,
-                chunks=buckets, verbose=self.verbose)
+                chunks=buckets, verbose=self.verbose,
+                dtype="int8" if w8a8 else None,
+                backend="w8a8" if w8a8 else "pallas")
+        if self.precision != "float":
+            self._quantize_weights()
         tokens = jnp.zeros((self.slots, 1), jnp.int32)
         active = jnp.zeros((self.slots,), bool)
         slot0 = self._slot_ids[0]
-        jax.block_until_ready(
-            self._decode_fn(self.params, self.state, tokens, active))
-        self._warmed.add("decode")
-        for c in buckets:
-            jax.block_until_ready(self._chunk_fn(
-                self.params, self.state, jnp.zeros((1, c), jnp.int32), slot0))
-            self._warmed.add(f"chunk{c}")
-        jax.block_until_ready(
-            self._reset_fn(self.state, jnp.zeros((self.slots,), bool)))
-        self._warmed.add("reset")
+        with self._precision_ctx():
+            jax.block_until_ready(
+                self._decode_fn(self.params, self.state, tokens, active))
+            self._warmed.add("decode")
+            for c in buckets:
+                jax.block_until_ready(self._chunk_fn(
+                    self.params, self.state, jnp.zeros((1, c), jnp.int32), slot0))
+                self._warmed.add(f"chunk{c}")
+            jax.block_until_ready(
+                self._reset_fn(self.state, jnp.zeros((self.slots,), bool)))
+            self._warmed.add("reset")
         self.metrics.aot_steps = len(self._warmed)
         if self.verbose:
             print(f"warmup: {len(self._warmed)} step shapes compiled "
-                  f"(decode + chunks {buckets} + reset)")
+                  f"(decode + chunks {buckets} + reset)"
+                  + (f" [{self.precision}]" if self.precision != "float" else ""))
+
+    def _precision_ctx(self):
+        """Context the engine traces its steps under.  Trace-time dispatch:
+        the precision mode binds when a step is traced (quant/modes.py), so
+        warmup and any cold compile enter this context; executing the
+        already-compiled steps needs no context."""
+        import contextlib
+
+        if self.precision == "float":
+            return contextlib.nullcontext()
+        from repro.quant import modes as qmodes
+
+        return qmodes.precision(self.precision)
+
+    def _quantize_weights(self) -> None:
+        """Calibrate (for "w8a8-calibrated") and swap the float params for
+        the int8-resident pytree; the float copy is dropped — the memory
+        saving is real, not additive."""
+        from repro import quant
+
+        scales = None
+        if self.precision == "w8a8-calibrated":
+            batches = self._calib_batches
+            if batches is None:
+                batches = quant.synthetic_batches(
+                    self.cfg, n=2, batch=2,
+                    seq=min(32, self.max_seq), seed=self._seed)
+            scales = quant.collect_scales(self.params, self.cfg, batches)
+            self.metrics.calib_sites = len(scales)
+            if self.verbose:
+                print(f"calibrated {len(scales)} activation sites "
+                      f"({scales.observer}, {scales.batches} batches)")
+        self.metrics.weight_bytes_float = quant.weight_bytes(self.params)
+        self.params = quant.quantize_params(
+            self.params, cfg=self.cfg, scales=scales)
+        self.metrics.weight_bytes = quant.weight_bytes(self.params)
+        self.metrics.precision = self.precision
+        if self.verbose:
+            mb = 2**20
+            print(f"quantized {quant.quantized_leaf_count(self.params)} "
+                  f"weights int8-resident: "
+                  f"{self.metrics.weight_bytes_float / mb:.1f}MiB -> "
+                  f"{self.metrics.weight_bytes / mb:.1f}MiB")
 
     def _run_compiled(self, key: str, fn, *args):
         if key not in self._warmed:
             self.metrics.cold_compiles += 1
             self._warmed.add(key)
+            with self._precision_ctx():   # cold trace: bind the precision
+                return fn(*args)
         return fn(*args)
 
     # -- request lifecycle ---------------------------------------------------

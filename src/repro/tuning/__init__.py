@@ -23,6 +23,7 @@ from repro.tuning.autotuner import (
     TuneResult,
     disable,
     enable,
+    env_truthy,
     get_tuner,
     is_enabled,
     set_tuner,
@@ -48,6 +49,7 @@ __all__ = [
     "proxy_config",
     "enable",
     "disable",
+    "env_truthy",
     "is_enabled",
     "get_tuner",
     "set_tuner",

@@ -31,7 +31,13 @@ from repro.tuning.candidates import dtype_bits, enumerate_tiles
 
 # Backends that name a real kernel specialization.  "interpret" runs the
 # "pallas" kernel under the interpreter, so it shares that tuning key.
-_KERNEL_BACKEND = {"pallas": "pallas", "interpret": "pallas", "pipelined": "pipelined"}
+# "dequant" and "w8a8" are the int8 deployment epilogues (kernels/registry.py):
+# their fused scale write-back costs differently from the plain GeMM, so each
+# is its own tuning key.
+_KERNEL_BACKEND = {
+    "pallas": "pallas", "interpret": "pallas", "pipelined": "pipelined",
+    "dequant": "dequant", "w8a8": "w8a8",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,19 +172,16 @@ class Autotuner:
     def _rank_wallclock(
         self, cands: Sequence[TpuGemmSpec], shape: GemmShape, dtype, backend: str
     ) -> Tuple[TpuGemmSpec, float, str]:
-        import jax.numpy as jnp
-
         from repro.kernels.registry import make_kernel
 
-        name = getattr(dtype, "name", str(dtype))
-        a = jnp.zeros((shape.M, shape.K), name)
-        b = jnp.zeros((shape.K, shape.N), name)
         interpret = backend == "interpret"
         kb = _KERNEL_BACKEND.get(backend, backend)
         best, best_t = None, float("inf")
         for spec in cands:
             try:
-                t = self._time_spec(make_kernel(kb, spec, interpret=interpret), a, b, spec)
+                args = self._bench_args(kb, shape, dtype, spec)
+                t = self._time_spec(
+                    make_kernel(kb, spec, interpret=interpret), args)
             except Exception:
                 continue  # candidate fails to compile/run here: not a winner
             if t < best_t:
@@ -187,17 +190,36 @@ class Autotuner:
             return self._rank_analytic(cands, shape, dtype)
         return best, best_t, "wallclock"
 
-    def _time_spec(self, kernel, a, b, spec: TpuGemmSpec) -> float:
+    def _bench_args(self, kb: str, shape: GemmShape, dtype, spec: TpuGemmSpec):
+        """Dummy operands for one candidate, pre-padded to its tile grid.
+
+        The epilogue kernels take scale operands on top of A/B: "dequant"
+        consumes int8 A/B plus row/column scales, "w8a8" consumes *float*
+        activations (it quantizes them in-kernel) plus column scales.
+        """
         import jax.numpy as jnp
 
-        pm, pk = (-a.shape[0]) % spec.tm, (-a.shape[1]) % spec.tk
-        pn = (-b.shape[1]) % spec.tn
-        ap = jnp.pad(a, ((0, pm), (0, pk))) if pm or pk else a
-        bp = jnp.pad(b, ((0, pk), (0, pn))) if pk or pn else b
-        kernel(ap, bp).block_until_ready()  # compile + warm
+        name = getattr(dtype, "name", str(dtype))
+        pad = lambda v, t: v + (-v) % t
+        M, K, N = pad(shape.M, spec.tm), pad(shape.K, spec.tk), pad(shape.N, spec.tn)
+        if kb == "w8a8":
+            return (
+                jnp.zeros((M, K), jnp.float32),
+                jnp.zeros((K, N), jnp.int8),
+                jnp.ones((1, N), jnp.float32),
+            )
+        a = jnp.zeros((M, K), name)
+        b = jnp.zeros((K, N), name)
+        if kb == "dequant":
+            return (a.astype(jnp.int8), b.astype(jnp.int8),
+                    jnp.ones((M, 1), jnp.float32), jnp.ones((1, N), jnp.float32))
+        return (a, b)
+
+    def _time_spec(self, kernel, args) -> float:
+        kernel(*args).block_until_ready()  # compile + warm
         t0 = time.perf_counter()
         for _ in range(self.wallclock_iters):
-            out = kernel(ap, bp)
+            out = kernel(*args)
         out.block_until_ready()
         return (time.perf_counter() - t0) / self.wallclock_iters
 

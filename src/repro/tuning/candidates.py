@@ -35,6 +35,12 @@ from repro.core.generator import (
 # Power-of-two sweep bounds; the per-problem aligned extents are added on top.
 _TM_SWEEP = (8, 16, 32, 64, 128, 256, 512)
 _TKN_SWEEP = (128, 256, 512)
+# int8 operands halve the A/B block footprint and pack 32 sublanes, so the
+# int8 design space extends one octave further in every dimension (the
+# paper's P_A=P_B=8 datapath is exactly this: more tile per SRAM byte).
+# The VMEM-budget check below still prunes anything that does not fit.
+_TM_SWEEP_INT8 = _TM_SWEEP + (1024,)
+_TKN_SWEEP_INT8 = _TKN_SWEEP + (1024,)
 
 
 def dtype_bits(dtype) -> int:
@@ -81,9 +87,13 @@ def enumerate_tiles(
     tm_cap = _align_up(shape.M, sub)
     tk_cap = _align_up(shape.K, MXU_LANES)
     tn_cap = _align_up(shape.N, MXU_LANES)
-    tms = sorted({min(v, tm_cap) for v in _TM_SWEEP if v % sub == 0} | {min(512, tm_cap)})
-    tks = sorted({min(v, tk_cap) for v in _TKN_SWEEP} | {min(512, tk_cap)})
-    tns = sorted({min(v, tn_cap) for v in _TKN_SWEEP} | {min(512, tn_cap)})
+    tm_sweep = _TM_SWEEP_INT8 if int8 else _TM_SWEEP
+    tkn_sweep = _TKN_SWEEP_INT8 if int8 else _TKN_SWEEP
+    cap_ext = 1024 if int8 else 512
+    tms = sorted({min(v, tm_cap) for v in tm_sweep if v % sub == 0}
+                 | {min(cap_ext, tm_cap)})
+    tks = sorted({min(v, tk_cap) for v in tkn_sweep} | {min(cap_ext, tk_cap)})
+    tns = sorted({min(v, tn_cap) for v in tkn_sweep} | {min(cap_ext, tn_cap)})
 
     seen = set()
     out: List[TpuGemmSpec] = []

@@ -1,0 +1,277 @@
+"""repro.quant tests: kernels, mode hygiene, calibration determinism,
+int8-resident equivalence, and w8a8 serving fidelity (dense + hybrid)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, quant
+from repro.kernels import ops, ref
+from repro.kernels.quant import quantize_rows
+from repro.kernels.registry import make_kernel, registered_kernels
+from repro.core.generator import TpuGemmSpec
+from repro.models import model as M
+from repro.quant import modes
+from repro.quant.calibrate import (
+    AbsmaxObserver,
+    MovingAverageObserver,
+    PercentileObserver,
+)
+from repro.serving.engine import Engine
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [4, 10, 300])
+def test_quantize_rows_ragged(m):
+    """Ragged M pads to the block grid and slices back; every row matches
+    the per-row reference exactly."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(m, 32)), jnp.float32)
+    q, s = quantize_rows(x, block_m=8, interpret=True)
+    qr, sr = ref.quantize_ref(x, axis=-1)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    assert q.shape == (m, 32) and s.shape == (m, 1)
+
+
+def test_w8a8_kernel_registered_and_matches_ref():
+    """The registry's "w8a8" variant (row quant + fused dequant) matches the
+    composed jnp oracles."""
+    assert "w8a8" in registered_kernels()
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+    wf = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    wq, sw = ref.quantize_ref(wf, axis=0)
+    spec = TpuGemmSpec(tm=8, tk=128, tn=128)
+    out = make_kernel("w8a8", spec, interpret=True)(a, wq, sw.reshape(1, -1))
+    aq, sa = ref.quantize_ref(a, axis=-1)
+    want = ref.gemm_dequant_ref(aq, wq, sa, sw.reshape(1, -1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+def test_int8_resident_matches_on_the_fly():
+    """linear() on a QuantTensor == linear(quant="int8") on the float weight:
+    pre-quantizing weights changes *when* quantization happens, not what."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(3, 5, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    resident = ops.linear(x, quant.quantize_leaf(w))
+    on_the_fly = ops.linear(x, w, quant="int8")
+    np.testing.assert_allclose(
+        np.asarray(resident), np.asarray(on_the_fly), rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_w8a8_static_act_scale():
+    """Calibrated path: a static activation scale replaces per-row absmax."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    wq, sw = ref.quantize_ref(w, axis=0)
+    s = float(jnp.max(jnp.abs(x))) / 127.0
+    got = ops.gemm_w8a8(x, wq, sw, act_scale=s, backend="xla")
+    xq = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    want = ref.gemm_dequant_ref(xq, wq, jnp.full((8, 1), s), sw.reshape(1, -1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# precision modes
+# ---------------------------------------------------------------------------
+
+def test_mode_save_restore_hygiene():
+    assert modes.get_mode() == "float"
+    with quant.precision("w8a8"):
+        assert modes.get_mode() == "w8a8"
+        with quant.precision("w8a8-calibrated"):       # nesting
+            assert modes.get_mode() == "w8a8-calibrated"
+        assert modes.get_mode() == "w8a8"
+        with pytest.raises(RuntimeError):              # exception inside
+            with quant.precision("float"):
+                assert modes.get_mode() == "float"
+                raise RuntimeError("boom")
+        assert modes.get_mode() == "w8a8"              # restored past raise
+    assert modes.get_mode() == "float"
+    with pytest.raises(ValueError):
+        modes.set_mode("w4a4")                         # unknown mode
+    assert modes.get_mode() == "float"
+
+
+def test_mode_drives_linear_and_none_opts_out():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(6, 48)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(48, 24)), jnp.float32)
+    int8_y = ops.linear(x, w, quant="int8")
+    float_y = ops.linear(x, w)
+    with quant.precision("w8a8"):
+        np.testing.assert_allclose(
+            np.asarray(ops.linear(x, w)), np.asarray(int8_y), rtol=1e-6)
+        # explicit opt-out beats the mode (SSM gate projections rely on this)
+        np.testing.assert_allclose(
+            np.asarray(ops.linear(x, w, quant="none")), np.asarray(float_y),
+            rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# observers + calibration
+# ---------------------------------------------------------------------------
+
+def test_observers():
+    rng = np.random.default_rng(5)
+    a1, a2 = np.abs(rng.normal(size=(32, 8))), np.abs(rng.normal(size=(32, 8)))
+
+    absmax = AbsmaxObserver()
+    pct = PercentileObserver(percentile=90.0)
+    ema = MovingAverageObserver(momentum=0.5)
+    for obs in (absmax, pct, ema):
+        for a in (a1, a2):
+            obs.observe(a)
+            obs.end_batch()
+
+    assert float(absmax.stat()) == pytest.approx(max(a1.max(), a2.max()))
+    # percentile clips the tail: strictly inside the absmax
+    assert float(pct.stat()) < float(absmax.stat())
+    # EMA of the two per-batch absmaxes at momentum 0.5
+    want = 0.5 * a1.max(axis=0) + 0.5 * a2.max(axis=0)
+    np.testing.assert_allclose(ema.stat(per_channel=True), want)
+    # per-channel stats cover every channel and scales are positive
+    assert absmax.stat(per_channel=True).shape == (8,)
+    assert (absmax.scale(per_channel=True) > 0).all()
+
+
+@pytest.mark.parametrize("observer", ["absmax", "moving_average", "percentile"])
+def test_calibration_deterministic(observer):
+    cfg = configs.get_smoke("gemma3-1b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    batches = quant.synthetic_batches(cfg, n=2, batch=2, seq=8)
+    t1 = quant.collect_scales(params, cfg, batches, observer=observer)
+    t2 = quant.collect_scales(params, cfg, batches, observer=observer)
+    assert len(t1) > 0
+    assert t1.scales == t2.scales
+    for k, v in t1.channel_scales.items():
+        np.testing.assert_array_equal(v, t2.channel_scales[k])
+    # every attention/FFN projection of every group got a site
+    for g in range(cfg.n_groups):
+        assert f"blocks.{g}.sub0.mixer.wq" in t1.scales
+    assert "head" in t1.scales
+    assert modes.get_mode() == "float"   # capture context fully unwound
+
+
+def test_quantize_params_structure_and_memory():
+    cfg = configs.get_smoke("gemma3-1b")          # tied embeddings
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    table = quant.collect_scales(
+        params, cfg, quant.synthetic_batches(cfg, n=1, batch=1, seq=8))
+    qp = quant.quantize_params(params, cfg=cfg, scales=table)
+    wq = qp["blocks"]["sub0"]["mixer"]["wq"]
+    assert isinstance(wq, quant.QuantTensor)
+    G = cfg.n_groups
+    assert wq.q.dtype == jnp.int8 and wq.q.shape[0] == G
+    assert wq.scale.shape == (G, 1, wq.q.shape[-1])
+    assert wq.act_scale is not None and wq.act_scale.shape == (G, 1, 1)
+    assert "head_q" in qp                          # tied-head int8 copy
+    assert not isinstance(qp["embed"], quant.QuantTensor)  # gathered, not matmul'd
+    assert quant.weight_bytes(qp) < 0.5 * quant.weight_bytes(params)
+    # dequantized round trip stays close to the float weights
+    deq = quant.dequantize_params(qp)
+    w = np.asarray(params["blocks"]["sub0"]["mixer"]["wq"], np.float32)
+    d = np.asarray(deq["blocks"]["sub0"]["mixer"]["wq"], np.float32)
+    assert np.linalg.norm(d - w) / np.linalg.norm(w) < 0.01
+    # error report covers every quantized leaf
+    rows = quant.layer_error_rows(params, qp)
+    assert len(rows) == quant.quantized_leaf_count(qp)
+    assert all(r["rel_err"] < 0.02 for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# serving fidelity + engine end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "arch", ["gemma3-1b", "jamba-1.5-large-398b", "xlstm-1.3b"])
+def test_w8a8_paged_decode_matches_float(arch):
+    """Paged chunked-prefill + decode under w8a8 tracks the float path within
+    quantization tolerance for the dense, hybrid, and recurrent families."""
+    cfg = configs.get_smoke(arch)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    qparams = quant.quantize_params(params, cfg=cfg)
+    slots, prompt_len, gen = 2, 6, 3
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(slots, prompt_len)).astype(np.int32)
+
+    def serve(p, mode):
+        num_blocks, bs, mb = 1 + slots * 8, 4, 8
+        state = M.init_paged_decode_state(
+            cfg, slots, num_blocks=num_blocks, block_size=bs,
+            max_blocks_per_slot=mb)
+        from repro.serving import kv_cache as kvc
+        alloc = kvc.BlockAllocator(num_blocks, bs)
+        tables = kvc.BlockTables(slots, mb)
+        for s in range(slots):
+            tables.ensure(s, prompt_len + gen + 1, alloc)
+        state = state._replace(block_tables=tables.array())
+        outs = []
+        with quant.precision(mode):
+            for s in range(slots):
+                _, state = M.prefill_chunk(
+                    p, cfg, state, jnp.asarray(prompts[s:s + 1]), jnp.int32(s))
+            tok = jnp.zeros((slots, 1), jnp.int32)
+            for _ in range(gen):
+                logits, state = M.paged_decode_step(p, cfg, state, tok)
+                outs.append(np.asarray(logits, np.float32))
+        return outs
+
+    ref_logits = serve(params, "float")
+    q_logits = serve(qparams, "w8a8")
+    for lf, lq in zip(ref_logits, q_logits):
+        rel = np.linalg.norm(lq - lf) / max(np.linalg.norm(lf), 1e-9)
+        assert rel < 0.15, rel
+
+
+@pytest.mark.parametrize("precision", ["w8a8", "w8a8-calibrated"])
+def test_engine_w8a8_end_to_end(precision):
+    """Engine(precision=...) serves the dense smoke arch with zero cold
+    compiles after warmup, reports the memory saving, and leaves the global
+    precision mode untouched."""
+    cfg = configs.get_smoke("gemma3-1b")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+               for _ in range(3)]
+
+    eng = Engine(cfg, slots=2, max_seq=32, max_chunk=8, precision=precision)
+    eng.warmup()
+    assert modes.get_mode() == "float"       # warmup restored the mode
+    for p in prompts:
+        eng.submit(p, max_new=4)
+    results = eng.run()
+    assert len(results) == len(prompts)
+    assert all(len(v) == 4 for v in results.values())
+    assert eng.metrics.cold_compiles == 0
+    assert eng.metrics.weight_bytes < eng.metrics.weight_bytes_float
+    s = eng.metrics.summary()
+    assert f"precision={precision}" in s and "smaller" in s
+    if precision == "w8a8-calibrated":
+        assert eng.metrics.calib_sites > 0
+    # params really are int8-resident (not re-quantized per step)
+    assert quant.quantized_leaf_count(eng.params) > 0
+
+
+def test_engine_w8a8_tracks_float_tokens():
+    """Same prompts through a float and a w8a8 engine: generations have the
+    same shape and the engines stay isolated (separate jit traces)."""
+    cfg = configs.get_smoke("gemma3-1b")
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(2)]
+
+    outs = {}
+    for prec in ("float", "w8a8"):
+        eng = Engine(cfg, slots=2, max_seq=24, max_chunk=8, precision=prec)
+        eng.warmup()
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        outs[prec] = eng.run()
+    for rid in outs["float"]:
+        assert outs["float"][rid].shape == outs["w8a8"][rid].shape
