@@ -31,11 +31,12 @@ def main(argv=None) -> None:
                          "(exports REPRO_BENCH_FAST=1)")
     ap.add_argument("--only", default=None,
                     help="run a single section (fig5|table2|fig7|table3|"
-                         "kernel|serving)")
+                         "kernel|serving|cluster)")
     args = ap.parse_args(argv)
     if args.fast:
         os.environ["REPRO_BENCH_FAST"] = "1"
     from benchmarks import (
+        cluster_bench,
         fig5_ablation,
         fig7_gemmini,
         kernel_bench,
@@ -51,6 +52,7 @@ def main(argv=None) -> None:
         ("table3", table3_efficiency),
         ("kernel", kernel_bench),
         ("serving", serving_bench),
+        ("cluster", cluster_bench),
     ]
     if args.only:
         modules = [(n, m) for n, m in modules if n == args.only]

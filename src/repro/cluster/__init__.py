@@ -1,0 +1,56 @@
+"""Multi-replica serving: replica pool + router + prefix cache + traffic.
+
+The cluster layer scales the single-``Engine`` serving stack the same way
+the paper scales a single PE: keep every compute unit fed and share the
+memory pool.  Five modules:
+
+  replica.py      — N engines, thread-per-replica, device-pinned when
+                    ``jax.devices()`` has more than one
+  router.py       — bounded admission + shed policy + pure routing
+                    policies (round-robin / least-loaded / prefix-affinity)
+  prefix_cache.py — radix-tree prompt-prefix cache over the refcounted KV
+                    block pool (serving/kv_cache.py)
+  traffic.py      — seeded workload generation + trace record/replay
+  metrics.py      — cluster-wide aggregation (tail TTFT, occupancy,
+                    prefix hit rate, shed rate)
+
+Everything is lazy (mirroring repro.serving): importing ``repro.cluster``
+pulls no jax-heavy module until a symbol is touched.
+"""
+
+_LAZY = {
+    "ClusterMetrics": ("repro.cluster.metrics", "ClusterMetrics"),
+    "ClusterRequest": ("repro.cluster.replica", "ClusterRequest"),
+    "POLICIES": ("repro.cluster.router", "POLICIES"),
+    "PrefixCache": ("repro.cluster.prefix_cache", "PrefixCache"),
+    "Replica": ("repro.cluster.replica", "Replica"),
+    "ReplicaPool": ("repro.cluster.replica", "ReplicaPool"),
+    "ReplicaView": ("repro.cluster.replica", "ReplicaView"),
+    "Router": ("repro.cluster.router", "Router"),
+    "Trace": ("repro.cluster.traffic", "Trace"),
+    "TraceItem": ("repro.cluster.traffic", "TraceItem"),
+    "TrafficConfig": ("repro.cluster.traffic", "TrafficConfig"),
+    "aggregate": ("repro.cluster.metrics", "aggregate"),
+    "generate": ("repro.cluster.traffic", "generate"),
+    "mixed_traffic": ("repro.cluster.traffic", "mixed_traffic"),
+    "pick_least_loaded": ("repro.cluster.router", "pick_least_loaded"),
+    "pick_prefix_affinity": ("repro.cluster.router", "pick_prefix_affinity"),
+    "pick_round_robin": ("repro.cluster.router", "pick_round_robin"),
+    "replay": ("repro.cluster.traffic", "replay"),
+    "shared_system_prompt": ("repro.cluster.traffic", "shared_system_prompt"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro.cluster' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

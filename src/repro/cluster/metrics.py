@@ -1,0 +1,116 @@
+"""Cluster-wide metric aggregation.
+
+One struct answering the system-level questions a single ``EngineMetrics``
+cannot: tail TTFT across every replica *including router queue wait*,
+per-replica occupancy (is the load balancer actually balancing?), prefix
+cache effectiveness, and the shed rate the backpressure policy produced.
+Percentiles reuse ``serving.engine.percentile`` so per-engine and
+cluster-wide tails are computed with one definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.serving.engine import percentile
+
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    replicas: int = 0
+    requests: int = 0             # finished
+    offered: int = 0              # submitted to the router (incl. shed)
+    shed: int = 0
+    elapsed_s: float = 0.0        # caller-timed serving window
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
+    ttft_mean_s: float = 0.0      # router wait + engine TTFT
+    ttft_p50_s: float = 0.0
+    ttft_p95_s: float = 0.0
+    req_tok_s_p50: float = 0.0    # per-request decode rate percentiles
+    req_tok_s_p95: float = 0.0
+    per_replica_requests: List[int] = dataclasses.field(default_factory=list)
+    per_replica_occupancy: List[float] = dataclasses.field(default_factory=list)
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / max(1, self.offered)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(1, self.prefix_lookups)
+
+    @property
+    def throughput_tok_s(self) -> float:
+        """Generated tokens over the serving window — the system number a
+        capacity plan cares about (per-engine decode-tick throughput lives
+        in each EngineMetrics)."""
+        return self.decode_tokens / self.elapsed_s if self.elapsed_s else 0.0
+
+    def summary(self) -> str:
+        occ = "/".join(f"{o:.0%}" for o in self.per_replica_occupancy)
+        out = (
+            f"replicas={self.replicas} requests={self.requests}"
+            f"/{self.offered} shed={self.shed} ({self.shed_rate:.0%}) "
+            f"decode={self.decode_tokens} tok "
+            f"({self.throughput_tok_s:.1f} tok/s over {self.elapsed_s:.2f}s) "
+            f"ttft p50={self.ttft_p50_s * 1e3:.0f}ms "
+            f"p95={self.ttft_p95_s * 1e3:.0f}ms "
+            f"req_tok_s p50={self.req_tok_s_p50:.1f} "
+            f"p95={self.req_tok_s_p95:.1f} "
+            f"occupancy=[{occ}] "
+            f"balance={self.per_replica_requests}"
+        )
+        if self.prefix_lookups:
+            out += (f" prefix_hit_rate={self.prefix_hit_rate:.0%} "
+                    f"({self.prefix_hit_tokens} tok reused)")
+        return out
+
+
+def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
+              handles: Optional[list] = None) -> ClusterMetrics:
+    """Fold a pool (and optionally its router / resolved handles) into one
+    ClusterMetrics.  With handles, TTFT includes router + inbox wait; without
+    (e.g. driving engines directly), engine-side TTFT is used."""
+    engines = pool.engines
+    m = ClusterMetrics(replicas=len(engines), elapsed_s=elapsed_s)
+    per_req = []
+    for e in engines:
+        m.decode_tokens += e.metrics.decode_tokens
+        m.prefill_tokens += e.metrics.prefill_tokens
+        m.prefix_lookups += e.metrics.prefix_lookups
+        m.prefix_hits += e.metrics.prefix_hits
+        m.prefix_hit_tokens += e.metrics.prefix_hit_tokens
+        m.per_replica_requests.append(len(e.metrics.requests))
+        m.per_replica_occupancy.append(e.metrics.mean_occupancy)
+        per_req.extend(e.metrics.requests)
+    # Every request's first token leaves a prefill chunk, so fold those
+    # tokens into the generated total alongside decode-step tokens.
+    m.decode_tokens += len(per_req)
+    m.requests = len(per_req)
+    if handles is None and router is not None:
+        handles = [h for h in router.handles if h.done.is_set()]
+    if handles:
+        ttfts = [h.ttft_s for h in handles if h.ttft_s is not None]
+    else:
+        ttfts = [r.ttft_s for r in per_req]
+    rates = [r.decode_tok_s for r in per_req]
+    m.ttft_mean_s = sum(ttfts) / len(ttfts) if ttfts else 0.0
+    m.ttft_p50_s = percentile(ttfts, 50)
+    m.ttft_p95_s = percentile(ttfts, 95)
+    m.req_tok_s_p50 = percentile(rates, 50)
+    m.req_tok_s_p95 = percentile(rates, 95)
+    # A request can be shed at the router (in-flight bound) or by an
+    # engine-side admission-queue bound after routing; both are refusals.
+    engine_shed = sum(1 for h in (handles or []) if h.shed)
+    if router is not None:
+        m.offered = router.offered
+        m.shed = router.shed + engine_shed
+    else:
+        m.offered = m.requests + engine_shed
+        m.shed = engine_shed
+    return m

@@ -1,0 +1,331 @@
+"""Replica pool: N serving engines, thread-per-replica, device-pinned.
+
+One ``Engine`` saturates one device's compute the way the paper's single
+core saturates its MXU; the pool is the system layer above it — N engines
+each driven by their own thread through the existing ``tick()`` loop, fed
+by a router (cluster/router.py).  When ``jax.devices()`` exposes more than
+one device, replicas pin round-robin via ``jax.default_device``; otherwise
+they share the default device and the win comes from overlap (one
+replica's host-side scheduling runs while another's device step computes —
+XLA releases the GIL during execution).
+
+Engines are single-thread-confined: only the owning replica thread calls
+``submit``/``tick`` on its engine.  The router hands work over through a
+thread-safe inbox; results come back through ``ClusterRequest`` handles
+(future-like: ``result()`` blocks, ``done`` is an Event).
+
+Construction cost is shared where correctness allows: params are
+initialized once and handed to every engine (device_put per replica when
+pinned), and replicas of the same config reuse replica 0's jitted step
+functions, so the pool compiles each step shape once, not N times.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import queue as queue_lib
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.serving.engine import Engine
+
+
+class ClusterRequest:
+    """Handle for one routed request; resolves when its engine finishes."""
+
+    __slots__ = ("crid", "prompt", "max_new", "replica", "tokens", "shed",
+                 "error", "done", "t_submit", "t_engine_submit", "t_done",
+                 "engine_metrics")
+
+    def __init__(self, crid: int, prompt, max_new: int):
+        self.crid = crid
+        self.prompt = np.asarray(prompt, np.int32)
+        self.max_new = max_new
+        self.replica: Optional[int] = None
+        self.tokens: Optional[np.ndarray] = None
+        self.shed = False
+        self.error: Optional[BaseException] = None
+        self.done = threading.Event()
+        self.t_submit = time.monotonic()
+        self.t_engine_submit: Optional[float] = None
+        self.t_done: Optional[float] = None
+        self.engine_metrics = None           # serving.engine.RequestMetrics
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"request {self.crid} still in flight")
+        if self.error is not None:
+            raise self.error
+        if self.shed:
+            raise RuntimeError(f"request {self.crid} was shed")
+        return self.tokens
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Cluster TTFT: router/inbox wait + the engine-side TTFT."""
+        if self.engine_metrics is None or self.t_engine_submit is None:
+            return None
+        return (self.t_engine_submit - self.t_submit
+                + self.engine_metrics.ttft_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaView:
+    """Load snapshot a routing policy sees — plain data, so policies stay
+    pure functions of their inputs (testable without a live pool)."""
+
+    idx: int
+    inbox: int           # routed but not yet engine-submitted
+    queued: int          # in the engine's admission queue
+    active: int          # occupying a slot (prefill or decode)
+    free_blocks: int     # KV pool blocks not allocated
+
+    @property
+    def depth(self) -> int:
+        return self.inbox + self.queued + self.active
+
+
+class Replica:
+    """One engine + its driver thread + its inbox."""
+
+    def __init__(self, idx: int, cfg, *, device=None, params=None,
+                 share_steps_from: Optional[Engine] = None, **engine_kwargs):
+        self.idx = idx
+        self.device = device
+        with self._device_ctx():
+            if params is not None and device is not None:
+                params = jax.device_put(params, device)
+            self.engine = Engine(cfg, params=params, **engine_kwargs)
+        if share_steps_from is not None:
+            # Same cfg => same traces; sharing the jitted callables means the
+            # pool compiles each step shape once (jit dispatch is
+            # thread-safe; the steps are functional).
+            self.engine.share_steps_from(share_steps_from)
+        self.inbox: "queue_lib.Queue[ClusterRequest]" = queue_lib.Queue()
+        self._pending: Dict[int, ClusterRequest] = {}   # engine rid -> handle
+        self._metrics_seen = 0
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+
+    def _device_ctx(self):
+        return (jax.default_device(self.device) if self.device is not None
+                else contextlib.nullcontext())
+
+    def warmup(self) -> None:
+        with self._device_ctx():
+            self.engine.warmup()
+
+    # -- router-facing -------------------------------------------------------
+
+    def submit(self, handle: ClusterRequest) -> None:
+        handle.replica = self.idx
+        if self.error is not None:          # dead replica: fail fast, don't
+            handle.error = self.error       # park work in an undrained inbox
+            handle.done.set()
+            return
+        self.inbox.put(handle)
+        self._wake.set()
+
+    def view(self) -> ReplicaView:
+        eng = self.engine
+        return ReplicaView(
+            idx=self.idx,
+            inbox=self.inbox.qsize(),
+            queued=len(eng.scheduler.queue),
+            active=sum(r is not None for r in eng.scheduler.slots),
+            free_blocks=eng.alloc.free_blocks,
+        )
+
+    # -- the drive loop ------------------------------------------------------
+
+    def _drain_inbox(self) -> None:
+        while True:
+            try:
+                h = self.inbox.get_nowait()
+            except queue_lib.Empty:
+                return
+            try:
+                h.t_engine_submit = time.monotonic()
+                req = self.engine.submit(h.prompt, h.max_new)
+            except Exception as e:          # oversize prompt etc: fail the
+                h.error = e                 # handle, not the replica thread
+                h.done.set()
+                continue
+            if req is None:                 # engine-side queue bound hit
+                h.shed = True
+                h.done.set()
+            else:
+                self._pending[req.rid] = h
+
+    def _resolve(self) -> None:
+        if not self._pending:
+            return
+        reqs = self.engine.metrics.requests
+        by_rid = {}
+        for m in reqs[self._metrics_seen:]:
+            by_rid[m.rid] = m
+        self._metrics_seen = len(reqs)
+        for rid, m in by_rid.items():
+            h = self._pending.pop(rid, None)
+            if h is None:
+                continue
+            h.engine_metrics = m
+            h.tokens = self.engine.results[rid]
+            h.t_done = time.monotonic()
+            h.done.set()
+
+    def step(self) -> bool:
+        """One synchronous pump: drain inbox, tick once, resolve finishes.
+        Returns True while the engine still has work."""
+        self._drain_inbox()
+        busy = False
+        if self.engine.scheduler.has_work:
+            busy = self.engine.tick()
+            self._resolve()
+        return busy or not self.inbox.empty()
+
+    def _run(self) -> None:
+        try:
+            with self._device_ctx():
+                while not self._stop.is_set():
+                    if not self.step():
+                        # idle: sleep until the router wakes us (bounded so
+                        # a lost wakeup can only cost one nap)
+                        self._wake.wait(0.005)
+                        self._wake.clear()
+        except BaseException as e:          # pragma: no cover - defensive
+            self.error = e
+            self._fail_outstanding(e)
+
+    def _fail_outstanding(self, e: BaseException) -> None:
+        """Resolve every handle this replica owns — in flight *and* still in
+        the inbox — with the error, so no waiter hangs on a dead replica."""
+        for h in self._pending.values():
+            h.error = e
+            h.done.set()
+        self._pending.clear()
+        while True:
+            try:
+                h = self.inbox.get_nowait()
+            except queue_lib.Empty:
+                return
+            h.error = e
+            h.done.set()
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(
+            target=self._run, name=f"replica-{self.idx}", daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+
+class ReplicaPool:
+    """N replicas over one config: build, warm, start, submit, drain."""
+
+    def __init__(self, cfg, n: int, *, devices="auto", seed: int = 0,
+                 **engine_kwargs):
+        if n < 1:
+            raise ValueError(f"need at least one replica, got {n}")
+        self.cfg = cfg
+        if devices == "auto":
+            avail = jax.devices()
+            devices = ([avail[i % len(avail)] for i in range(n)]
+                       if len(avail) > 1 else [None] * n)
+        elif devices is None:
+            devices = [None] * n
+        if len(devices) != n:
+            raise ValueError(f"{len(devices)} devices for {n} replicas")
+        from repro.models import model as M
+
+        params = engine_kwargs.pop("params", None)
+        if params is None:
+            params = M.init_model(jax.random.PRNGKey(seed), cfg)
+        self.replicas: List[Replica] = []
+        for i in range(n):
+            self.replicas.append(Replica(
+                i, cfg, device=devices[i], params=params,
+                share_steps_from=self.replicas[0].engine if i else None,
+                seed=seed, **engine_kwargs))
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def engines(self) -> List[Engine]:
+        return [r.engine for r in self.replicas]
+
+    def warmup(self, verbose: bool = False) -> None:
+        # Serial on purpose: replica 0 pays the compiles, the rest hit the
+        # shared jit caches — the pool-level configuration-pre-loading
+        # analogue (one warmup amortized across the pool).
+        for r in self.replicas:
+            t0 = time.monotonic()
+            r.warmup()
+            if verbose:
+                print(f"replica[{r.idx}] warm in "
+                      f"{(time.monotonic() - t0) * 1e3:.0f}ms")
+
+    def start(self) -> None:
+        for r in self.replicas:
+            r.start()
+
+    def stop(self) -> None:
+        for r in self.replicas:
+            r.stop()
+
+    def submit_to(self, idx: int, handle: ClusterRequest) -> None:
+        self.replicas[idx].submit(handle)
+
+    def views(self) -> List[ReplicaView]:
+        return [r.view() for r in self.replicas]
+
+    def run_sync(self, max_ticks: Optional[int] = None) -> None:
+        """Threadless drive: round-robin one tick per replica until every
+        inbox and engine drains.  The deterministic twin of start()/drain()
+        — tests use it to get scheduling-order-independent runs."""
+        ticks = 0
+        while True:
+            busy = False
+            for r in self.replicas:
+                busy = r.step() or busy
+            ticks += 1
+            if not busy:
+                return
+            if max_ticks is not None and ticks >= max_ticks:
+                raise TimeoutError(f"pool still busy after {max_ticks} ticks")
+
+    def drain(self, handles, timeout: float = 120.0) -> None:
+        """Block until every accepted handle resolves (threaded mode).
+
+        A dead replica's exception is re-raised here (checked while
+        waiting, not only at the end — a handle routed to a replica that
+        died before picking it up would otherwise turn the root cause into
+        an unhelpful TimeoutError)."""
+        deadline = time.monotonic() + timeout
+        for h in handles:
+            while not h.done.wait(min(0.25, max(0.0, deadline - time.monotonic()))):
+                for r in self.replicas:
+                    if r.error is not None:
+                        raise r.error
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"request {h.crid} unresolved after {timeout}s "
+                        f"(replica {h.replica})")
+        for r in self.replicas:
+            if r.error is not None:
+                raise r.error

@@ -1,0 +1,181 @@
+"""Cluster front-end: bounded admission, shed policy, pluggable routing.
+
+The router is the cluster's single entry point.  ``submit`` applies
+backpressure — a bounded in-flight window; beyond it requests are *shed*
+(counted and refused, never silently dropped) — and an async dispatcher
+thread moves accepted requests onto replica inboxes under a routing
+policy.
+
+Policies are pure functions ``pick(views, prompt, step=, seed=) -> idx``
+over plain ``ReplicaView`` snapshots, so they are unit-testable and
+deterministic given their inputs:
+
+  * ``round-robin``    — step modulo N; oblivious, perfectly fair.
+  * ``least-loaded``   — min (depth, -free KV blocks, idx): queue depth
+                         first, then the replica with the most free pool
+                         blocks (the KV analogue of picking the bank with
+                         the most headroom).
+  * ``prefix-affinity``— hash of the prompt's first KV block of tokens
+                         picks a home replica, so shared-prefix traffic
+                         lands where its prefix is cached (engine-local
+                         prefix caches combine with this to act like one
+                         cluster-wide cache); falls back to least-loaded
+                         when the home replica is overloaded.
+"""
+
+from __future__ import annotations
+
+import threading
+import zlib
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.cluster.replica import ClusterRequest, ReplicaPool, ReplicaView
+
+# Tokens hashed by prefix-affinity: one engine KV block's worth keeps the
+# key aligned with what the prefix cache can actually share.
+AFFINITY_TOKENS = 16
+# Depth gap beyond which affinity yields to least-loaded (hot-prefix storms
+# must not wedge one replica while others idle).
+AFFINITY_SLACK = 8
+
+
+def pick_round_robin(views: List[ReplicaView], prompt, *, step: int,
+                     seed: int = 0) -> int:
+    return step % len(views)
+
+
+def pick_least_loaded(views: List[ReplicaView], prompt, *, step: int,
+                      seed: int = 0) -> int:
+    return min(views, key=lambda v: (v.depth, -v.free_blocks, v.idx)).idx
+
+
+def pick_prefix_affinity(views: List[ReplicaView], prompt, *, step: int,
+                         seed: int = 0) -> int:
+    key = np.asarray(prompt[:AFFINITY_TOKENS], np.int64).tobytes()
+    home = zlib.crc32(key + seed.to_bytes(8, "little")) % len(views)
+    fallback = pick_least_loaded(views, prompt, step=step, seed=seed)
+    if views[home].depth > views[fallback].depth + AFFINITY_SLACK:
+        return fallback
+    return home
+
+
+POLICIES: Dict[str, Callable] = {
+    "round-robin": pick_round_robin,
+    "least-loaded": pick_least_loaded,
+    "prefix-affinity": pick_prefix_affinity,
+}
+
+
+class Router:
+    """Admission queue + dispatcher thread over a ReplicaPool."""
+
+    def __init__(self, pool: ReplicaPool, policy="round-robin", *,
+                 max_pending: Optional[int] = None, seed: int = 0,
+                 async_dispatch: bool = True):
+        if isinstance(policy, str):
+            if policy not in POLICIES:
+                raise ValueError(
+                    f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+            policy = POLICIES[policy]
+        self.pool = pool
+        self.policy = policy
+        self.max_pending = max_pending     # in-flight bound; None = unbounded
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._queue: "deque[ClusterRequest]" = deque()
+        self._live: List[ClusterRequest] = []
+        self.handles: List[ClusterRequest] = []   # every accepted request
+        self.offered = 0
+        self.shed = 0
+        self.dispatched = 0
+        self._crid = 0
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        if async_dispatch:
+            self._thread = threading.Thread(
+                target=self._dispatch_loop, name="router", daemon=True)
+            self._thread.start()
+
+    # -- admission -----------------------------------------------------------
+
+    def _in_flight_locked(self) -> int:
+        self._live = [h for h in self._live if not h.done.is_set()]
+        return len(self._live)
+
+    def submit(self, prompt, max_new: int) -> Optional[ClusterRequest]:
+        """Admit or shed.  Backpressure is an in-flight window: accepted but
+        unfinished requests (queued here, queued at a replica, or running)
+        count against ``max_pending``; at the bound, new arrivals shed."""
+        with self._lock:
+            self.offered += 1
+            if (self.max_pending is not None
+                    and self._in_flight_locked() >= self.max_pending):
+                self.shed += 1
+                return None
+            h = ClusterRequest(self._crid, prompt, max_new)
+            self._crid += 1
+            self._queue.append(h)
+            self._live.append(h)
+            self.handles.append(h)
+            self._not_empty.notify()
+            return h
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / max(1, self.offered)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._not_empty:
+                while not self._queue and not self._stop:
+                    self._not_empty.wait(0.05)
+                if self._stop and not self._queue:
+                    return
+                h = self._queue.popleft()
+                step = self.dispatched
+                self.dispatched += 1
+            # Policy outside the lock: views poll replica state, which may
+            # block briefly, and submit() must stay non-blocking.
+            idx = self.policy(self.pool.views(), h.prompt,
+                              step=step, seed=self.seed)
+            self.pool.submit_to(idx, h)
+
+    def dispatch_sync(self) -> None:
+        """Drain the admission queue on the caller's thread (the
+        deterministic twin of the dispatcher, for run_sync tests)."""
+        while True:
+            with self._lock:
+                if not self._queue:
+                    return
+                h = self._queue.popleft()
+                step = self.dispatched
+                self.dispatched += 1
+            idx = self.policy(self.pool.views(), h.prompt,
+                              step=step, seed=self.seed)
+            self.pool.submit_to(idx, h)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def drain(self, timeout: float = 120.0) -> None:
+        self.pool.drain(list(self.handles), timeout=timeout)
+
+    def close(self) -> None:
+        with self._not_empty:
+            self._stop = True
+            self._not_empty.notify_all()
+        if self._thread is not None:
+            self._thread.join(5.0)
+            self._thread = None
+        self.pool.stop()
+
+    def __enter__(self) -> "Router":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -116,13 +116,15 @@ def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
     if not m:
         return 2.0 * res_elems  # degenerate dot
-    args = re.findall(r"%([\w.\-]+)", op.rest.split(", ", 2)[0] + "," + op.rest)
-    lhs = None
-    margs = re.match(r"%([\w.\-]+)(?:,\s*%([\w.\-]+))?", op.rest)
-    if margs:
-        lhs = margs.group(1)
-    lhs_type = symbols.get(lhs or "", "")
-    dims = _shape_dims(lhs_type)
+    # XLA emits operands either typed — dot(f32[64,128]{1,0} %a, ...) — or
+    # bare — dot(%a, %b).  In the typed form the lhs shape is inline (the
+    # first shape in rest); in the bare form resolve %a through the symbol
+    # table.
+    dims = _shape_dims(op.rest)
+    if not dims:
+        margs = re.match(r"%([\w.\-]+)", op.rest.strip())
+        lhs_type = symbols.get(margs.group(1), "") if margs else ""
+        dims = _shape_dims(lhs_type)
     contracted = 1
     if m.group(1):
         for d in m.group(1).split(","):

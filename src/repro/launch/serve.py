@@ -38,7 +38,7 @@ from repro.serving.engine import (  # re-exported for back-compat
 )
 
 __all__ = ["Engine", "autotune_for_serving", "serving_gemm_shapes",
-           "token_by_token_prefill", "main"]
+           "token_by_token_prefill", "serve_cluster", "main"]
 
 
 def warm_token_by_token(cfg, params, slots: int, max_seq: int):
@@ -125,6 +125,38 @@ def _timed(fn) -> float:
     return time.perf_counter() - t0
 
 
+def serve_cluster(cfg, args) -> None:
+    """Multi-replica serving (repro.cluster): pool + router + traffic."""
+    from repro import cluster
+
+    max_seq = args.prompt_len + args.gen_len + 1
+    pool = cluster.ReplicaPool(
+        cfg, args.replicas, slots=args.slots or 2, max_seq=max_seq,
+        block_size=args.block_size, num_blocks=args.kv_blocks or None,
+        max_chunk=args.chunk, autotune=args.autotune,
+        tune_mode=args.tune_mode, precision=args.precision,
+        prefix_cache=args.prefix_cache)
+    t0 = time.time()
+    pool.warmup(verbose=True)
+    print(f"warmup: {args.replicas} replicas in {time.time() - t0:.1f}s "
+          f"(steps compiled once, shared)")
+    trace = cluster.mixed_traffic(
+        cfg.vocab, n=args.requests, seed=0,
+        max_prompt=args.prompt_len, max_new=(2, args.gen_len))
+    pool.start()
+    router = cluster.Router(pool, policy=args.router_policy,
+                            max_pending=args.max_pending or None)
+    t0 = time.time()
+    handles, shed = cluster.replay(trace, router.submit)
+    router.drain()
+    elapsed = time.time() - t0
+    m = cluster.aggregate(pool, router, elapsed_s=elapsed)
+    print(f"cluster[{args.router_policy}]: {m.summary()}")
+    for i, e in enumerate(pool.engines):
+        print(f"  replica[{i}]: {e.metrics.summary()}")
+    router.close()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b", choices=configs.list_archs())
@@ -150,9 +182,23 @@ def main(argv=None):
                          "paper's int8 datapath (repro.quant)")
     ap.add_argument("--compare-prefill", action="store_true",
                     help="time legacy token-by-token prefill vs the engine")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1 serves through repro.cluster: a replica pool "
+                         "behind an async router")
+    ap.add_argument("--router-policy", default="round-robin",
+                    choices=["round-robin", "least-loaded", "prefix-affinity"],
+                    help="cluster load-balancing policy (with --replicas)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse prefilled KV blocks across requests sharing "
+                         "a prompt prefix (attention-only archs)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="cluster backpressure: in-flight request bound "
+                         "(0 = unbounded; overflow is shed)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch)
+    if args.replicas > 1:
+        return serve_cluster(cfg, args)
     slots = args.slots or args.requests
     max_seq = args.prompt_len + args.gen_len + 1
     eng = Engine(
@@ -162,6 +208,7 @@ def main(argv=None):
         max_chunk=args.chunk,
         autotune=args.autotune, tune_mode=args.tune_mode,
         precision=args.precision,
+        prefix_cache=args.prefix_cache,
         verbose=True,
     )
     t0 = time.time()

@@ -1,1 +1,42 @@
-"""parallel subpackage."""
+"""Sharding and pipeline parallelism: the stable ``repro.parallel`` API.
+
+Lazy re-exports (mirroring repro.serving's ``__getattr__`` table) so
+``from repro.parallel import shard`` is a stable import without eagerly
+loading the mesh/pipeline machinery into every model-layer import.
+"""
+
+import importlib
+
+_SUBMODULES = ("logical", "pipeline", "sharding")
+
+_LAZY = {
+    # logical axis rules (the model layer's shard() calls resolve here)
+    "use_rules": ("repro.parallel.logical", "use_rules"),
+    "resolve_spec": ("repro.parallel.logical", "resolve_spec"),
+    "shard": ("repro.parallel.logical", "shard"),
+    "sharding_for": ("repro.parallel.logical", "sharding_for"),
+    # plans: params/batch/cache shardings from a mesh + plan
+    "ParallelPlan": ("repro.parallel.sharding", "ParallelPlan"),
+    "make_plan": ("repro.parallel.sharding", "make_plan"),
+    "param_sharding": ("repro.parallel.sharding", "param_sharding"),
+    "batch_sharding": ("repro.parallel.sharding", "batch_sharding"),
+    "cache_sharding": ("repro.parallel.sharding", "cache_sharding"),
+    # pipeline parallelism
+    "gpipe": ("repro.parallel.pipeline", "gpipe"),
+    "split_stages": ("repro.parallel.pipeline", "split_stages"),
+}
+
+__all__ = sorted(set(_SUBMODULES) | set(_LAZY))
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.parallel.{name}")
+    raise AttributeError(f"module 'repro.parallel' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

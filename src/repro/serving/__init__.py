@@ -22,7 +22,9 @@ from repro.serving.kv_cache import (  # noqa: F401
     NULL_BLOCK,
     PagedKVCache,
     blocks_for,
+    copy_blocks,
     default_pool_blocks,
+    fork_blocks,
     gather_kv,
     init_paged_kv,
     write_kv,
@@ -36,6 +38,7 @@ _LAZY = {
     "Scheduler": ("repro.serving.scheduler", "Scheduler"),
     "plan_chunks": ("repro.serving.prefill", "plan_chunks"),
     "chunk_buckets": ("repro.serving.prefill", "chunk_buckets"),
+    "percentile": ("repro.serving.engine", "percentile"),
 }
 
 

@@ -32,6 +32,7 @@ Typical use (launch/serve.py is a thin CLI over exactly this):
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional
 
@@ -122,6 +123,17 @@ def autotune_for_serving(cfg, *, slots: int, mode: str = "analytic",
 # metrics
 # ---------------------------------------------------------------------------
 
+def percentile(vals, q: float) -> float:
+    """Nearest-rank percentile over a possibly-empty sequence (0.0 when
+    empty).  One definition shared by EngineMetrics and cluster/metrics.py,
+    so per-engine and cluster-wide tails are computed identically."""
+    vals = sorted(float(v) for v in vals)
+    if not vals:
+        return 0.0
+    k = min(len(vals) - 1, max(0, int(math.ceil(q / 100.0 * len(vals))) - 1))
+    return vals[k]
+
+
 @dataclasses.dataclass
 class RequestMetrics:
     rid: int
@@ -130,6 +142,15 @@ class RequestMetrics:
     ttft_s: float                 # submit -> first generated token
     latency_s: float              # submit -> finish
     queue_steps: int              # engine ticks spent waiting for a slot
+    cached_tokens: int = 0        # prompt tokens served from a shared prefix
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Per-request decode rate: tokens after the first over the time
+        after the first (the first token falls out of the final prefill
+        chunk, so it belongs to TTFT, not decode)."""
+        span = self.latency_s - self.ttft_s
+        return (self.new_tokens - 1) / span if span > 0 else 0.0
 
 
 @dataclasses.dataclass
@@ -149,6 +170,9 @@ class EngineMetrics:
     occupancy_sum: float = 0.0
     occupancy_samples: int = 0
     elapsed_s: float = 0.0
+    prefix_lookups: int = 0       # admissions that consulted the prefix cache
+    prefix_hits: int = 0          # admissions seeded from a cached prefix
+    prefix_hit_tokens: int = 0    # prompt tokens whose prefill was skipped
     requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
 
     @property
@@ -162,6 +186,16 @@ class EngineMetrics:
         and understate prompt-heavy workloads."""
         return self.decode_tokens / self.decode_time_s if self.decode_time_s else 0.0
 
+    def ttft_percentile(self, q: float) -> float:
+        return percentile([r.ttft_s for r in self.requests], q)
+
+    def decode_tok_s_percentile(self, q: float) -> float:
+        return percentile([r.decode_tok_s for r in self.requests], q)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(1, self.prefix_lookups)
+
     def summary(self) -> str:
         n = len(self.requests)
         ttft = np.mean([r.ttft_s for r in self.requests]) if n else 0.0
@@ -171,11 +205,21 @@ class EngineMetrics:
             f"prefill_tokens={self.prefill_tokens} "
             f"decode_steps={self.decode_steps} "
             f"decode={self.decode_tokens} tok ({self.throughput_tok_s:.1f} tok/s) "
-            f"ttft={ttft*1e3:.0f}ms latency={lat*1e3:.0f}ms "
+            f"ttft={ttft*1e3:.0f}ms "
+            f"(p50={self.ttft_percentile(50)*1e3:.0f}ms "
+            f"p95={self.ttft_percentile(95)*1e3:.0f}ms) "
+            f"latency={lat*1e3:.0f}ms "
+            f"req_tok_s_p50={self.decode_tok_s_percentile(50):.1f} "
+            f"p95={self.decode_tok_s_percentile(95):.1f} "
             f"kv_occupancy={self.mean_occupancy:.0%} "
             f"peak_blocks={self.peak_blocks_in_use} "
             f"warmed={self.aot_steps} cold_compiles={self.cold_compiles}"
         )
+        if self.prefix_lookups:
+            out += (
+                f" prefix_hits={self.prefix_hits}/{self.prefix_lookups} "
+                f"({self.prefix_hit_tokens} tok reused)"
+            )
         if self.precision != "float":
             saved = (1.0 - self.weight_bytes / self.weight_bytes_float
                      if self.weight_bytes_float else 0.0)
@@ -211,6 +255,7 @@ class Engine:
         precision: str = "float",
         calib_batches=None,
         max_queue: Optional[int] = None,
+        prefix_cache=False,
         seed: int = 0,
         verbose: bool = False,
     ):
@@ -243,16 +288,58 @@ class Engine:
         self.scheduler = Scheduler(slots, max_chunk=max_chunk, max_queue=max_queue)
         self.alloc = kvc.BlockAllocator(self.num_blocks, block_size)
         self.tables = kvc.BlockTables(slots, self.max_blocks_per_slot)
+        # Prompt-prefix reuse (cluster/prefix_cache.py): requests whose
+        # prompts share full, block-aligned prefixes fork the already-written
+        # KV blocks (refcounted) and prefill only the uncached suffix.
+        # Limited to attention-only stacks — a recurrent (SSM/xLSTM) layer's
+        # state is not captured by KV blocks, so a seeded prefix would skip
+        # its scan.
+        self.prefix_cache = None
+        if prefix_cache:
+            if any(k not in ("attn", "attn_local") for k in cfg.layer_kinds()):
+                raise ValueError(
+                    "prefix_cache requires an attention-only stack; "
+                    f"{cfg.name} has kinds {cfg.layer_kinds()}")
+            if prefix_cache is True or isinstance(prefix_cache, int):
+                from repro.cluster.prefix_cache import PrefixCache
+
+                # True: unbounded (pool pressure evicts); int: max_blocks.
+                mb = None if prefix_cache is True else int(prefix_cache)
+                self.prefix_cache = PrefixCache(self.alloc, max_blocks=mb)
+            else:
+                # Caller-built cache (e.g. a subclass wired to eng.alloc
+                # post-construction): block ids only mean anything inside
+                # the allocator that issued them.
+                if prefix_cache.alloc is not self.alloc:
+                    raise ValueError(
+                        "prefix_cache is bound to a different allocator; "
+                        "pass True (or a max_blocks int) and let the engine "
+                        "build its own, or construct the cache from "
+                        "engine.alloc")
+                self.prefix_cache = prefix_cache
+        self._prefix_match: Dict[int, tuple] = {}  # rid -> (blocks, toks, fresh)
+        self._seeded: Dict[int, int] = {}          # rid -> forked block count
         self.state = M.init_paged_decode_state(
             cfg, slots, num_blocks=self.num_blocks, block_size=block_size,
             max_blocks_per_slot=self.max_blocks_per_slot,
         )
         self.metrics = EngineMetrics()
 
-        self._decode_fn = jax.jit(steps_lib.make_paged_serve_step(cfg))
-        self._chunk_fn = jax.jit(steps_lib.make_prefill_chunk_step(cfg))
+        # The decode state (KV pools included) is *donated* to every step:
+        # XLA updates the pools in place instead of copying them per tick.
+        # Without donation each step memcpys the whole pool (tens of MB for
+        # even small configs) — measured ~1000x slower for the update itself
+        # on CPU, and the copies saturate memory bandwidth, which is exactly
+        # the resource replica threads must share (cluster/replica.py).
+        # Every call site immediately reassigns self.state from the step's
+        # return, so the consumed buffers are never touched again.
+        self._decode_fn = jax.jit(
+            steps_lib.make_paged_serve_step(cfg), donate_argnums=(1,))
+        self._chunk_fn = jax.jit(
+            steps_lib.make_prefill_chunk_step(cfg), donate_argnums=(1,))
         self._reset_fn = jax.jit(
-            lambda state, mask: M.reset_slots(cfg, state, mask))
+            lambda state, mask: M.reset_slots(cfg, state, mask),
+            donate_argnums=(0,))
         self._warmed: set = set()                # step shapes compiled so far
         self._slot_used = [False] * slots        # occupied at least once
         # Scalar construction (jnp.int32) costs ~0.7 ms on CPU jax; slot ids
@@ -265,6 +352,16 @@ class Engine:
         self._submit_t: Dict[int, float] = {}
         self._first_tok_t: Dict[int, float] = {}
         self.results: Dict[int, np.ndarray] = {}
+
+    def share_steps_from(self, other: "Engine") -> None:
+        """Reuse another engine's jitted step callables (and their compile
+        caches).  Only valid across engines of the same config — same
+        traces, same shapes; ReplicaPool uses this so a pool compiles each
+        step shape once, and benchmarks/tests use it to not re-pay warmup
+        per engine.  The single place that knows the step-field list."""
+        self._decode_fn = other._decode_fn
+        self._chunk_fn = other._chunk_fn
+        self._reset_fn = other._reset_fn
 
     # -- warmup: the configuration-pre-loading analogue ----------------------
 
@@ -297,17 +394,24 @@ class Engine:
         tokens = jnp.zeros((self.slots, 1), jnp.int32)
         active = jnp.zeros((self.slots,), bool)
         slot0 = self._slot_ids[0]
+        # The steps donate their state input, so warmup *threads* the state
+        # through every call instead of discarding outputs, then rebuilds a
+        # fresh zero state (the chunk steps advanced slot 0's length).
+        state = self.state
         with self._precision_ctx():
-            jax.block_until_ready(
-                self._decode_fn(self.params, self.state, tokens, active))
+            _, state = self._decode_fn(self.params, state, tokens, active)
             self._warmed.add("decode")
             for c in buckets:
-                jax.block_until_ready(self._chunk_fn(
-                    self.params, self.state, jnp.zeros((1, c), jnp.int32), slot0))
+                _, state = self._chunk_fn(
+                    self.params, state, jnp.zeros((1, c), jnp.int32), slot0)
                 self._warmed.add(f"chunk{c}")
-            jax.block_until_ready(
-                self._reset_fn(self.state, jnp.zeros((self.slots,), bool)))
+            state = self._reset_fn(state, jnp.zeros((self.slots,), bool))
             self._warmed.add("reset")
+            jax.block_until_ready(state)
+        self.state = M.init_paged_decode_state(
+            self.cfg, self.slots, num_blocks=self.num_blocks,
+            block_size=self.block_size,
+            max_blocks_per_slot=self.max_blocks_per_slot)
         self.metrics.aot_steps = len(self._warmed)
         if self.verbose:
             print(f"warmup: {len(self._warmed)} step shapes compiled "
@@ -390,16 +494,47 @@ class Engine:
         return req
 
     def _can_admit(self, req: Request) -> bool:
-        return self.alloc.can_reserve(
-            kvc.blocks_for(req.prompt_len + req.max_new, self.block_size))
+        need = kvc.blocks_for(req.prompt_len + req.max_new, self.block_size)
+        if self.prefix_cache is None:
+            return self.alloc.can_reserve(need)
+        # Prefix path: match full blocks of an already-prefilled identical
+        # prompt prefix, fork them (refcount, zero KV bytes moved), and
+        # reserve only the *fresh* worst case.  Under pool pressure the
+        # cache gives blocks back (LRU) before we refuse admission.  The
+        # fork happens *before* eviction so an eviction sweep that reaches
+        # our own matched nodes can only drop the cache's refs — the blocks
+        # stay alive under ours.
+        blocks, tokens = self.prefix_cache.lookup(req.prompt)
+        if blocks:
+            kvc.fork_blocks(self.alloc, blocks)
+        n_fresh = need - len(blocks)
+        if not self.alloc.can_reserve(n_fresh):
+            self.prefix_cache.evict(n_fresh - self.alloc.available)
+            if not self.alloc.can_reserve(n_fresh):
+                if blocks:
+                    self.alloc.free(blocks)     # un-fork: admission refused
+                return False
+        req.cached_tokens = tokens
+        self._prefix_match[req.rid] = (blocks, tokens, n_fresh)
+        return True
 
     def _admit(self) -> None:
-        to_reset = []
+        to_reset, seeds = [], []
         for slot, req in self.scheduler.admit(self._can_admit):
-            n = kvc.blocks_for(req.prompt_len + req.max_new, self.block_size)
+            blocks, ptoks, n_fresh = self._prefix_match.pop(
+                req.rid, ((), 0, None))
+            n = (n_fresh if n_fresh is not None else
+                 kvc.blocks_for(req.prompt_len + req.max_new, self.block_size))
             if not self.alloc.reserve(n):   # _can_admit just vouched for this
                 raise RuntimeError(f"reservation of {n} blocks failed post-admit")
             self._reserved[req.rid] = n
+            self._seeded[req.rid] = len(blocks)
+            if self.prefix_cache is not None:
+                self.metrics.prefix_lookups += 1
+                if blocks:
+                    self.metrics.prefix_hits += 1
+                    self.metrics.prefix_hit_tokens += ptoks
+                    seeds.append((slot, list(blocks), ptoks))
             # A *refilled* slot needs its recurrent state and length zeroed
             # (the rest of the batch keeps decoding undisturbed); a
             # never-used slot is already zeroed — no step needed.
@@ -411,6 +546,17 @@ class Engine:
             mask[to_reset] = True
             self.state = self._run_compiled(
                 "reset", self._reset_fn, self.state, jnp.asarray(mask))
+        if seeds:
+            # Install the forked prefix *after* any reset: the slot's table
+            # row starts with the shared blocks and its length starts at the
+            # (block-aligned) cached-token count, so every later KV write —
+            # prefill of the suffix, then decode — lands at positions >= the
+            # shared boundary, i.e. only ever in refcount-1 blocks.
+            lengths = np.array(self.state.lengths)
+            for slot, blocks, ptoks in seeds:
+                self.tables.seed(slot, blocks)
+                lengths[slot] = ptoks
+            self.state = self.state._replace(lengths=jnp.asarray(lengths))
 
     def _sync_tables(self) -> None:
         if self.tables.dirty:
@@ -419,7 +565,10 @@ class Engine:
     def _finish(self, req: Request) -> None:
         slot = self.scheduler.release(req)
         drawn = len(self.tables.blocks[slot])
-        unused = max(0, self._reserved.pop(req.rid, drawn) - drawn)
+        # Seeded (forked-prefix) blocks were never reserved — only the fresh
+        # draws count against this request's reservation.
+        fresh_drawn = drawn - self._seeded.pop(req.rid, 0)
+        unused = max(0, self._reserved.pop(req.rid, fresh_drawn) - fresh_drawn)
         self.tables.release(slot, self.alloc, unreserve=unused)
         self.results[req.rid] = np.asarray(req.out_tokens, np.int32)
         now = time.monotonic()
@@ -431,6 +580,7 @@ class Engine:
             ttft_s=t_first - t_submit,
             latency_s=now - t_submit,
             queue_steps=(req.first_token_step or self._step) - req.submit_step,
+            cached_tokens=req.cached_tokens,
         ))
 
     def _record_token(self, req: Request, token: int) -> None:
@@ -463,6 +613,15 @@ class Engine:
             self.scheduler.on_prefill(req, chunk, self._step)
             self.metrics.prefill_chunks += 1
             self.metrics.prefill_tokens += chunk
+            if req.phase is Phase.DECODE and self.prefix_cache is not None:
+                # Prompt fully in the pool: publish its full blocks for
+                # later requests (the cache takes its own refs; the partial
+                # tail block keeps receiving decode writes and is excluded).
+                n_full = req.prompt_len // self.block_size
+                if n_full:
+                    self.prefix_cache.insert(
+                        req.prompt[: n_full * self.block_size],
+                        self.tables.blocks[req.slot][:n_full])
             if req.phase is Phase.DECODE:
                 # Prompt complete: the chunk's last logits yield the first
                 # generated token (no separate step for it).  Index on the

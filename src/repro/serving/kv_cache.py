@@ -27,7 +27,7 @@ core programs the streamer strides between GeMM calls.
 from __future__ import annotations
 
 import math
-from typing import List, NamedTuple, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +108,22 @@ def write_kv(
                         v=v_pool.reshape(nb, bs, H, D))
 
 
+def copy_blocks(
+    cache: PagedKVCache, src: jax.Array, dst: jax.Array
+) -> PagedKVCache:
+    """Device-side block copy: pool[dst[i]] = pool[src[i]] for K and V.
+
+    The write half of copy-on-write divergence: when a request must mutate a
+    block whose refcount is > 1 (see ``BlockTables.make_writable``), the host
+    allocates a fresh destination block and this op clones the shared
+    contents into it before any write lands.  `src`/`dst` are (n,) int32;
+    jit-safe for a fixed n (the engine batches one divergence wave per step).
+    """
+    k = cache.k.at[dst].set(cache.k[src])
+    v = cache.v.at[dst].set(cache.v[src])
+    return PagedKVCache(k=k, v=v)
+
+
 def gather_kv(
     cache: PagedKVCache, block_tables: jax.Array
 ) -> Tuple[jax.Array, jax.Array]:
@@ -137,12 +153,22 @@ def blocks_for(tokens: int, block_size: int) -> int:
 
 class BlockAllocator:
     """Free-list allocator over pool blocks 1..num_blocks-1 (0 is the null
-    block) with admission-time reservations.
+    block) with admission-time reservations and per-block refcounts.
 
     A request reserves its worst-case block count (ceil((prompt + max_new) /
     block_size)) when admitted, then draws blocks lazily as its length
     crosses block boundaries — so admission control guarantees a request
     never starves mid-decode, while resident usage tracks actual length.
+
+    Refcounts make blocks *shareable*: ``ref()`` (or the ``fork_blocks``
+    helper) lets a second owner — another request reusing a prefilled prompt
+    prefix, or the prefix cache itself — hold the same physical block, and
+    ``free()`` only returns a block to the free list when its last owner
+    lets go.  Shared (refcount > 1) blocks are read-only by convention: the
+    engine aligns prefix sharing to block boundaries so KV writes only ever
+    land in refcount-1 blocks, and ``BlockTables.make_writable`` +
+    ``copy_blocks`` provide explicit copy-on-write divergence for any caller
+    that must write into a shared region.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -151,6 +177,7 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))  # pop() -> 1 first
+        self._refs: Dict[int, int] = {}
         self._reserved = 0
 
     @property
@@ -183,16 +210,66 @@ class BlockAllocator:
             raise RuntimeError(
                 f"block pool exhausted: want {n}, free {len(self._free)}")
         out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._refs[b] = 1
         if reserved:
             self._reserved = max(0, self._reserved - n)
         return out
 
+    def ref(self, ids: List[int]) -> None:
+        """Add one owner to each (already-allocated) block."""
+        for b in ids:
+            if b not in self._refs:
+                raise ValueError(f"block {b} is not allocated; cannot share it")
+            self._refs[b] += 1
+
+    def refcount(self, b: int) -> int:
+        return self._refs.get(b, 0)
+
     def free(self, ids: List[int], *, unreserve: int = 0) -> None:
+        """Drop one owner per block; a block returns to the free list only
+        when its last owner frees it (shared blocks just lose a ref)."""
         for b in ids:
             if b == NULL_BLOCK:
                 raise ValueError("cannot free the null block")
-            self._free.append(b)
+            rc = self._refs.get(b, 0)
+            if rc <= 0:
+                raise ValueError(f"double free of block {b}")
+            if rc == 1:
+                del self._refs[b]
+                self._free.append(b)
+            else:
+                self._refs[b] = rc - 1
         self._reserved = max(0, self._reserved - unreserve)
+
+    def check(self) -> None:
+        """Allocator invariant: free list and refcounted blocks partition
+        the pool exactly, every refcount is positive, and the null block is
+        owned by neither.  Raises AssertionError on any leak/double-free."""
+        free = set(self._free)
+        live = set(self._refs)
+        assert len(free) == len(self._free), "duplicate ids on the free list"
+        assert not (free & live), f"blocks both free and live: {free & live}"
+        assert NULL_BLOCK not in free and NULL_BLOCK not in live, \
+            "the null block escaped into the allocator"
+        every = set(range(1, self.num_blocks))
+        assert free | live == every, \
+            f"leaked blocks: {sorted(every - free - live)}"
+        assert all(rc > 0 for rc in self._refs.values()), "non-positive refcount"
+        assert 0 <= self._reserved <= len(self._free), \
+            f"reservations ({self._reserved}) exceed the free list ({len(self._free)})"
+
+
+def fork_blocks(alloc: BlockAllocator, ids: List[int]) -> List[int]:
+    """Copy-on-write fork: share `ids` with a new owner (refcount + 1 each)
+    and return the same physical ids.  No KV bytes move — both owners read
+    the same pool blocks; a write requires divergence first (see
+    ``BlockTables.make_writable`` / ``copy_blocks``).  The engine only forks
+    *full* blocks at block-aligned prefix boundaries, so its writes — which
+    always start at the first un-shared position — never touch a forked
+    block and the copy half of CoW stays off the hot path."""
+    alloc.ref(ids)
+    return list(ids)
 
 
 class BlockTables:
@@ -226,6 +303,40 @@ class BlockTables:
             self.blocks[slot].append(b)
         self.dirty = True
         return True
+
+    def seed(self, slot: int, ids: List[int]) -> None:
+        """Install already-owned blocks (a forked prefix) at the head of an
+        *empty* slot row.  The caller has taken its refs (fork_blocks);
+        release() later drops them like any other row entry."""
+        if self.blocks[slot]:
+            raise RuntimeError(
+                f"slot {slot} is not empty; seed only a fresh slot")
+        if len(ids) > self.max_blocks:
+            raise RuntimeError(
+                f"seed of {len(ids)} blocks exceeds max_blocks {self.max_blocks}")
+        for i, b in enumerate(ids):
+            self.table[slot, i] = b
+        self.blocks[slot] = list(ids)
+        self.dirty = True
+
+    def make_writable(
+        self, slot: int, block_idx: int, alloc: BlockAllocator
+    ) -> Optional[Tuple[int, int]]:
+        """Copy-on-write divergence for one table entry: if the block at
+        `block_idx` is shared (refcount > 1), allocate a private replacement,
+        swap it into the row, drop this slot's ref on the original, and
+        return ``(src, dst)`` for the caller to clone on device via
+        ``copy_blocks``.  Returns None when the block is already exclusive.
+        """
+        b = self.blocks[slot][block_idx]
+        if alloc.refcount(b) <= 1:
+            return None
+        [fresh] = alloc.alloc(1, reserved=False)
+        alloc.free([b])                      # drop this slot's share
+        self.blocks[slot][block_idx] = fresh
+        self.table[slot, block_idx] = fresh
+        self.dirty = True
+        return b, fresh
 
     def release(self, slot: int, alloc: BlockAllocator, *, unreserve: int = 0) -> int:
         """Free all of slot's blocks back to the pool; returns count freed."""

@@ -47,6 +47,9 @@ class Request:
     phase: Phase = Phase.QUEUED
     slot: int = -1
     prefilled: int = 0                 # prompt tokens already in the cache
+    cached_tokens: int = 0             # prompt tokens covered by a shared
+                                       # KV prefix at admission (prefill
+                                       # starts from here, not zero)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     submit_step: int = 0
     first_token_step: Optional[int] = None
@@ -112,7 +115,11 @@ class Scheduler:
             if not can_admit(self.queue[0]):
                 break
             req = self.queue.popleft()
-            req.slot, req.phase, req.prefilled = slot, Phase.PREFILL, 0
+            # Start-from-cached-prefix: the engine's admission check may have
+            # found a shared KV prefix for this prompt (req.cached_tokens);
+            # prefill then covers only the uncached suffix.
+            req.slot, req.phase = slot, Phase.PREFILL
+            req.prefilled = req.cached_tokens
             self.slots[slot] = req
             admitted.append((slot, req))
         return admitted

@@ -1,0 +1,501 @@
+"""Cluster subsystem tests: pure routing policies, deterministic traffic,
+prefix-cache fork/refcount safety, and cluster-of-1 token-equivalence with
+the bare engine (dense, hybrid, recurrent families).
+
+Every test touching the block pool ends with ``alloc.check()`` — the
+allocator invariant (free list + refcounted blocks partition the pool,
+no double-free, no leak) is the safety net under copy-on-write sharing.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.cluster.prefix_cache import PrefixCache
+from repro.cluster.replica import ReplicaPool, ReplicaView
+from repro.cluster.router import (
+    AFFINITY_SLACK,
+    POLICIES,
+    Router,
+    pick_least_loaded,
+    pick_prefix_affinity,
+    pick_round_robin,
+)
+from repro.cluster import metrics as cmetrics
+from repro.cluster import traffic
+from repro.models import model as M
+from repro.serving import kv_cache as kvc
+from repro.serving.engine import Engine, percentile
+
+FAMILY_ARCHS = ["gemma3-1b", "jamba-1.5-large-398b", "xlstm-1.3b"]
+
+
+# ---------------------------------------------------------------------------
+# routing policies: pure functions of (seed, queue state)
+# ---------------------------------------------------------------------------
+
+
+def _views(depths, free=None):
+    free = free or [100] * len(depths)
+    return [ReplicaView(idx=i, inbox=d, queued=0, active=0, free_blocks=f)
+            for i, (d, f) in enumerate(zip(depths, free))]
+
+
+def test_policies_are_pure_and_deterministic():
+    views = _views([3, 1, 2])
+    prompt = np.arange(20, dtype=np.int32)
+    for name, pick in POLICIES.items():
+        a = [pick(views, prompt, step=s, seed=7) for s in range(6)]
+        b = [pick(views, prompt, step=s, seed=7) for s in range(6)]
+        assert a == b, f"{name} is not deterministic"
+        assert all(0 <= i < 3 for i in a)
+
+
+def test_round_robin_cycles():
+    views = _views([0, 0, 0])
+    picks = [pick_round_robin(views, None, step=s) for s in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_prefers_depth_then_free_blocks():
+    assert pick_least_loaded(_views([4, 1, 2]), None, step=0) == 1
+    # tie on depth -> more free KV blocks wins
+    assert pick_least_loaded(_views([2, 2], free=[5, 9]), None, step=0) == 1
+    # full tie -> lowest index (stable)
+    assert pick_least_loaded(_views([2, 2], free=[5, 5]), None, step=0) == 0
+
+
+def test_prefix_affinity_sticks_and_sheds_overload():
+    views = _views([0, 0, 0, 0])
+    p1 = np.arange(24, dtype=np.int32)
+    p2 = np.arange(24, dtype=np.int32) + 1000
+    home1 = pick_prefix_affinity(views, p1, step=0, seed=0)
+    # same prefix, different suffix/lengths -> same home replica
+    for extra in (0, 5, 11):
+        q = np.concatenate([p1[:16], np.full(extra, 7, np.int32)])
+        assert pick_prefix_affinity(views, q, step=3, seed=0) == home1
+    # seed perturbs the hash deterministically
+    assert (pick_prefix_affinity(views, p1, step=0, seed=1)
+            == pick_prefix_affinity(views, p1, step=9, seed=1))
+    # overload on the home replica falls back to least-loaded
+    depths = [0, 0, 0, 0]
+    depths[home1] = AFFINITY_SLACK + 5
+    fell_back = pick_prefix_affinity(_views(depths), p1, step=0, seed=0)
+    assert fell_back != home1
+    _ = pick_prefix_affinity(views, p2, step=0, seed=0)  # just valid
+
+
+# ---------------------------------------------------------------------------
+# traffic: seeded generation + record/replay
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_deterministic_and_mixture_bounded():
+    cfg = traffic.TrafficConfig(
+        n_requests=40, rate_rps=100.0, vocab=64,
+        mixture=((0.5, 2, 6), (0.5, 10, 20)), max_new=(1, 5), seed=3)
+    a, b = traffic.generate(cfg), traffic.generate(cfg)
+    assert [it.prompt for it in a.items] == [it.prompt for it in b.items]
+    assert [it.t for it in a.items] == [it.t for it in b.items]
+    assert all(it.t <= nxt.t for it, nxt in zip(a.items, a.items[1:]))
+    for it in a.items:
+        assert 2 <= len(it.prompt) <= 20
+        assert 1 <= it.max_new <= 5
+        assert all(0 <= t < 64 for t in it.prompt)
+    c = traffic.generate(traffic.TrafficConfig(
+        n_requests=40, rate_rps=100.0, vocab=64,
+        mixture=((0.5, 2, 6), (0.5, 10, 20)), max_new=(1, 5), seed=4))
+    assert [it.prompt for it in c.items] != [it.prompt for it in a.items]
+
+
+def test_shared_system_prompt_shares_prefix():
+    tr = traffic.shared_system_prompt(256, n=10, seed=0, prefix_len=12,
+                                      suffix=(2, 4))
+    first = tr.items[0].prompt[:12]
+    assert all(it.prompt[:12] == first for it in tr.items)
+    assert all(14 <= len(it.prompt) <= 16 for it in tr.items)
+
+
+def test_trace_roundtrip(tmp_path):
+    tr = traffic.mixed_traffic(128, n=7, seed=5, rate_rps=50.0)
+    path = str(tmp_path / "trace.json")
+    tr.save(path)
+    back = traffic.Trace.load(path)
+    assert back.items == tr.items
+    assert back.meta["n_requests"] == 7
+
+
+def test_replay_counts_shed():
+    tr = traffic.mixed_traffic(64, n=6, seed=0)
+    seen = []
+
+    def submit(prompt, max_new):
+        seen.append((tuple(int(x) for x in prompt), max_new))
+        return None if len(seen) % 2 == 0 else object()
+
+    handles, shed = traffic.replay(tr, submit)
+    assert len(seen) == 6 and shed == 3 and len(handles) == 3
+    assert [s[0] for s in seen] == [it.prompt for it in tr.items]
+
+
+# ---------------------------------------------------------------------------
+# refcounts / fork / prefix cache (host-side, no jit)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_refcounts_and_fork():
+    alloc = kvc.BlockAllocator(num_blocks=10, block_size=4)
+    ids = alloc.alloc(3, reserved=False)
+    shared = kvc.fork_blocks(alloc, ids)
+    assert shared == ids
+    assert all(alloc.refcount(b) == 2 for b in ids)
+    alloc.free(ids)                       # first owner lets go
+    assert alloc.in_use == 3              # survives: second owner remains
+    alloc.check()
+    alloc.free(ids)                       # last owner -> back to the pool
+    assert alloc.in_use == 0
+    alloc.check()
+    with pytest.raises(ValueError):
+        alloc.free(ids)                   # double free is loud
+    with pytest.raises(ValueError):
+        alloc.ref([99])                   # can't share what isn't allocated
+
+
+def test_tables_seed_and_make_writable():
+    alloc = kvc.BlockAllocator(num_blocks=12, block_size=4)
+    tables = kvc.BlockTables(slots=2, max_blocks=4)
+    owned = alloc.alloc(2, reserved=False)
+    tables.seed(0, kvc.fork_blocks(alloc, owned))
+    assert tables.blocks[0] == owned
+    assert tables.table[0, :2].tolist() == owned
+    with pytest.raises(RuntimeError):
+        tables.seed(0, owned)             # only a fresh slot may be seeded
+    # CoW divergence: shared entry gets a private replacement
+    src_dst = tables.make_writable(0, 0, alloc)
+    assert src_dst is not None
+    src, dst = src_dst
+    assert src == owned[0] and dst not in owned
+    assert tables.blocks[0][0] == dst and alloc.refcount(dst) == 1
+    assert alloc.refcount(src) == 1       # only the original owner now
+    assert tables.make_writable(0, 0, alloc) is None   # already exclusive
+    tables.release(0, alloc)
+    alloc.free(owned)
+    alloc.check()
+    assert alloc.in_use == 0
+
+
+def test_copy_blocks_device_clone():
+    cache = kvc.init_paged_kv(num_blocks=4, block_size=2, n_kv_heads=1,
+                              head_dim=3, dtype=np.float32)
+    k = cache.k.at[1].set(7.0)
+    cache = kvc.PagedKVCache(k=k, v=cache.v.at[1].set(9.0))
+    out = kvc.copy_blocks(cache, np.array([1]), np.array([3]))
+    np.testing.assert_array_equal(np.asarray(out.k[3]), np.asarray(cache.k[1]))
+    np.testing.assert_array_equal(np.asarray(out.v[3]), np.asarray(cache.v[1]))
+    np.testing.assert_array_equal(np.asarray(out.k[2]), 0.0)
+
+
+def test_prefix_cache_radix_lookup_insert_evict():
+    alloc = kvc.BlockAllocator(num_blocks=32, block_size=4)
+    cache = PrefixCache(alloc)
+    toks = list(range(12))                # 3 full blocks
+    blocks = alloc.alloc(3, reserved=False)
+    assert cache.insert(toks, blocks) == 3
+    assert all(alloc.refcount(b) == 2 for b in blocks)
+
+    # full-prompt lookup is capped one token short of the prompt
+    got, n = cache.lookup(toks)
+    assert got == blocks[:2] and n == 8
+    # longer prompt sharing the prefix matches all three
+    got, n = cache.lookup(toks + [99, 100])
+    assert got == blocks and n == 12
+    # diverging second block stops the walk after one
+    got, n = cache.lookup(toks[:4] + [55, 55, 55, 55, 8, 9])
+    assert got == blocks[:1] and n == 4
+    assert cache.hits == 3 and cache.lookups == 3
+
+    # duplicate insert adopts nothing (first writer wins)
+    dup = alloc.alloc(3, reserved=False)
+    assert cache.insert(toks, dup) == 0
+    alloc.free(dup)
+
+    # the original writer releasing its blocks must not free cached ones
+    alloc.free(blocks)
+    assert alloc.in_use == 3
+    alloc.check()
+
+    # eviction is leaves-first and returns blocks to the pool
+    assert cache.evict(1) == 1
+    assert cache.cached_blocks == 2 and alloc.in_use == 2
+    assert cache.lookup(toks + [99])[1] == 8      # prefix still rooted
+    assert cache.clear() == 2
+    assert alloc.in_use == 0
+    alloc.check()
+
+
+def test_prefix_cache_lru_eviction_order():
+    alloc = kvc.BlockAllocator(num_blocks=32, block_size=2)
+    cache = PrefixCache(alloc)
+    a, b = alloc.alloc(1, reserved=False), alloc.alloc(1, reserved=False)
+    cache.insert([1, 2], a)
+    cache.insert([3, 4], b)
+    cache.lookup([1, 2, 9])               # touch a: b is now the LRU leaf
+    cache.evict(1)
+    assert cache.lookup([1, 2, 9])[0] == a
+    assert cache.lookup([3, 4, 9])[0] == []
+    cache.clear()
+    alloc.free(a)
+    alloc.free(b)      # the test's own (writer) ref, untouched by eviction
+    alloc.check()
+    assert alloc.in_use == 0
+
+
+def test_fork_survives_eviction_of_matched_nodes():
+    """The engine forks its prefix match *before* evicting under pool
+    pressure: an eviction sweep that reaches the matched nodes drops only
+    the cache's refs — the forked blocks stay alive under the request's."""
+    alloc = kvc.BlockAllocator(num_blocks=6, block_size=2)
+    cache = PrefixCache(alloc)
+    chain = alloc.alloc(3, reserved=False)
+    cache.insert([1, 2, 3, 4, 5, 6], chain)
+    alloc.free(chain)                     # writer done: cache is sole owner
+    matched, n = cache.lookup([1, 2, 3, 4, 5, 6, 7])
+    assert matched == chain and n == 6
+    kvc.fork_blocks(alloc, matched)       # the admission fork
+    cache.evict(3)                        # pressure wipes the whole tree
+    assert cache.cached_blocks == 0
+    alloc.check()
+    assert alloc.in_use == 3              # forked blocks survived
+    alloc.free(matched)                   # request finishes
+    alloc.check()
+    assert alloc.in_use == 0
+
+
+def test_prefix_cache_capacity_bound():
+    alloc = kvc.BlockAllocator(num_blocks=32, block_size=2)
+    cache = PrefixCache(alloc, max_blocks=2)
+    ids = alloc.alloc(3, reserved=False)
+    cache.insert([1, 2, 3, 4, 5, 6], ids)
+    assert cache.cached_blocks == 2       # deepest (stalest leaf) evicted
+    cache.clear()
+    alloc.free(ids)
+    alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# engine + prefix cache (jit; one compile set per config)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_prefix_cache_rejects_recurrent_archs():
+    cfg = configs.get_smoke("xlstm-1.3b")
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(cfg, slots=1, max_seq=16, prefix_cache=True)
+
+
+def test_engine_prefix_cache_reuses_and_stays_token_identical():
+    """Shared-prefix requests skip prefill for cached blocks, generate the
+    same tokens as a cache-less engine, and the allocator survives the whole
+    exercise with zero leaked or double-freed blocks."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab, size=k).astype(np.int32)])
+               for k in (3, 5, 2, 4)]
+
+    ref = Engine(cfg, params=params, slots=2, max_seq=32, block_size=4,
+                 max_chunk=4)
+    ref.warmup()
+    ref_reqs = [ref.submit(p, max_new=3) for p in prompts]
+    ref_out = ref.run()
+
+    eng = Engine(cfg, params=params, slots=2, max_seq=32, block_size=4,
+                 max_chunk=4, prefix_cache=True)
+    eng.share_steps_from(ref)
+    eng.warmup()
+    reqs = [eng.submit(p, max_new=3) for p in prompts]
+    out = eng.run()
+
+    for a, b in zip(ref_reqs, reqs):
+        np.testing.assert_array_equal(ref_out[a.rid], out[b.rid])
+    assert eng.metrics.prefix_hits >= 1
+    assert eng.metrics.prefix_hit_tokens >= 8
+    # skipped prefill really skipped: fewer prompt tokens prefilled
+    assert eng.metrics.prefill_tokens < ref.metrics.prefill_tokens
+    # requests released; only the cache's own refs remain
+    eng.alloc.check()
+    assert eng.alloc.in_use == eng.prefix_cache.cached_blocks
+    eng.prefix_cache.clear()
+    eng.alloc.check()
+    assert eng.alloc.in_use == 0
+
+
+def test_engine_prefix_cache_evicts_under_pool_pressure():
+    """A pool sized so cached blocks crowd out admissions: the engine must
+    evict cache refs rather than wedge, and finish every request."""
+    cfg = configs.get_smoke("gemma3-1b")
+    eng = Engine(cfg, slots=1, max_seq=16, block_size=4, num_blocks=5,
+                 max_chunk=4, prefix_cache=True)
+    eng.warmup()
+    rng = np.random.default_rng(1)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab, size=9).astype(np.int32),
+                       max_new=2) for _ in range(3)]
+    out = eng.run()
+    assert sorted(out) == [r.rid for r in reqs]
+    assert all(len(v) == 2 for v in out.values())
+    eng.alloc.check()
+    eng.prefix_cache.clear()
+    eng.alloc.check()
+    assert eng.alloc.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster-of-1 equivalence + pool/router behavior
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_cluster_of_one_matches_bare_engine(arch):
+    """A 1-replica pool behind the router (prefix cache off) produces
+    token-for-token the outputs of a bare Engine.run() on the same
+    requests — dense, hybrid, and recurrent families."""
+    cfg = configs.get_smoke(arch)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (6, 3, 5, 4)]
+
+    bare = Engine(cfg, params=params, slots=2, max_seq=32, block_size=4,
+                  max_chunk=4)
+    bare.warmup()
+    bare_reqs = [bare.submit(p, max_new=3) for p in prompts]
+    want = bare.run()
+
+    pool = ReplicaPool(cfg, 1, params=params, slots=2, max_seq=32,
+                       block_size=4, max_chunk=4)
+    pool.engines[0].share_steps_from(bare)
+    pool.warmup()
+    router = Router(pool, policy="round-robin", async_dispatch=False)
+    handles = [router.submit(p, max_new=3) for p in prompts]
+    router.dispatch_sync()
+    pool.run_sync(max_ticks=10_000)
+
+    for br, h in zip(bare_reqs, handles):
+        np.testing.assert_array_equal(want[br.rid], h.result(timeout=0))
+    assert router.shed == 0
+    pool.engines[0].alloc.check()
+    m = cmetrics.aggregate(pool, router, elapsed_s=1.0)
+    assert m.requests == len(prompts) and m.shed == 0
+
+
+def test_threaded_pool_serves_all_requests():
+    """Threaded replicas + async router dispatch: every request resolves,
+    work spreads across replicas, allocators stay clean."""
+    cfg = configs.get_smoke("gemma3-1b")
+    pool = ReplicaPool(cfg, 2, slots=2, max_seq=32, block_size=4, max_chunk=4)
+    pool.warmup()
+    pool.start()
+    try:
+        router = Router(pool, policy="least-loaded")
+        trace = traffic.mixed_traffic(cfg.vocab, n=8, seed=0, max_prompt=8,
+                                      max_new=(2, 4))
+        handles, shed = traffic.replay(trace, router.submit)
+        assert shed == 0
+        router.drain(timeout=120)
+        for h, it in zip(handles, trace.items):
+            assert len(h.result(timeout=0)) == it.max_new
+            assert h.ttft_s is not None and h.ttft_s >= 0
+        m = cmetrics.aggregate(pool, router, elapsed_s=1.0)
+        assert m.requests == 8
+        assert sum(m.per_replica_requests) == 8
+        for e in pool.engines:
+            e.alloc.check()
+    finally:
+        router.close()
+
+
+def test_router_backpressure_sheds():
+    """max_pending bounds in-flight requests; overflow is shed (counted,
+    returns None), never queued invisibly."""
+    cfg = configs.get_smoke("gemma3-1b")
+    pool = ReplicaPool(cfg, 1, slots=1, max_seq=16, block_size=4, max_chunk=4)
+    # replicas never started: everything stays in flight
+    router = Router(pool, policy="round-robin", max_pending=3,
+                    async_dispatch=False)
+    prompt = np.arange(4, dtype=np.int32)
+    accepted = [router.submit(prompt, 1) for _ in range(5)]
+    assert sum(h is not None for h in accepted) == 3
+    assert router.shed == 2 and router.offered == 5
+    assert router.shed_rate == pytest.approx(0.4)
+    pool.stop()
+
+
+def test_router_rejects_unknown_policy():
+    cfg = configs.get_smoke("gemma3-1b")
+    pool = ReplicaPool(cfg, 1, slots=1, max_seq=16, block_size=4, max_chunk=4)
+    with pytest.raises(ValueError, match="unknown policy"):
+        Router(pool, policy="fastest-first", async_dispatch=False)
+    pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 50) == 0.0
+    assert percentile([5.0], 95) == 5.0
+    vals = list(range(1, 101))
+    assert percentile(vals, 50) == 50
+    assert percentile(vals, 95) == 95
+    assert percentile([3.0, 1.0, 2.0], 100) == 3.0
+
+
+def test_engine_metrics_percentiles_in_summary():
+    from repro.serving.engine import EngineMetrics, RequestMetrics
+
+    m = EngineMetrics()
+    for i, (ttft, lat, toks) in enumerate(
+            [(0.010, 0.110, 11), (0.020, 0.120, 11), (0.200, 0.500, 31)]):
+        m.requests.append(RequestMetrics(
+            rid=i, prompt_len=4, new_tokens=toks, ttft_s=ttft,
+            latency_s=lat, queue_steps=0))
+    assert m.ttft_percentile(50) == pytest.approx(0.020)
+    assert m.ttft_percentile(95) == pytest.approx(0.200)
+    assert m.requests[0].decode_tok_s == pytest.approx(100.0)
+    s = m.summary()
+    assert "p50=" in s and "p95=" in s and "req_tok_s_p50=" in s
+
+
+def test_cluster_metrics_aggregate_folds_replicas():
+    from repro.serving.engine import EngineMetrics, RequestMetrics
+
+    class _Pool:
+        class _E:
+            def __init__(self, ttfts):
+                self.metrics = EngineMetrics()
+                for i, t in enumerate(ttfts):
+                    self.metrics.requests.append(RequestMetrics(
+                        rid=i, prompt_len=2, new_tokens=3, ttft_s=t,
+                        latency_s=t + 0.1, queue_steps=0))
+                self.metrics.decode_tokens = 2 * len(ttfts)
+                self.metrics.occupancy_sum = 0.5
+                self.metrics.occupancy_samples = 1
+
+        engines = None
+
+    pool = _Pool()
+    pool.engines = [_Pool._E([0.01, 0.02]), _Pool._E([0.03])]
+    m = cmetrics.aggregate(pool, elapsed_s=2.0)
+    assert m.requests == 3 and m.replicas == 2
+    # 6 decode-step tokens + 3 first-tokens out of final prefill chunks
+    assert m.decode_tokens == 9
+    assert m.throughput_tok_s == pytest.approx(4.5)
+    assert m.ttft_p50_s == pytest.approx(0.02)
+    assert m.per_replica_requests == [2, 1]
+    assert "replicas=2" in m.summary()
