@@ -1,0 +1,102 @@
+"""Diff two machine-readable benchmark reports (BENCH_smoke.json).
+
+Usage:
+  python benchmarks/compare.py BASE.json HEAD.json [--tolerance 0.25]
+
+Compares every numeric row shared by the two reports and prints one line
+per row that moved beyond the tolerance (relative change), plus rows that
+appeared or disappeared.  Exit code is 0 even when rows regress — CI runs
+this as a *report* step, not a gate: smoke-mode numbers on shared runners
+are too noisy to block merges on, but a 2x regression (or a vanished row)
+should be visible in the job log, not discovered at the next full
+`make bench`.  ``--fail-on-change`` flips it into a gate for local use.
+
+Row direction is not assumed: the report prints the signed relative change
+and lets the reader decide (a "regression" in a *_ms row is an increase;
+in a *_tok_s row a decrease).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+
+def load_rows(path: str) -> Tuple[Dict[str, object], dict]:
+    with open(path) as f:
+        report = json.load(f)
+    rows = {}
+    for section, body in report.get("sections", {}).items():
+        for row in body.get("rows", []):
+            rows[row["name"]] = row["value"]
+    return rows, report
+
+
+def as_number(v):
+    if isinstance(v, bool):
+        return None
+    if isinstance(v, (int, float)):
+        return float(v)
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return None
+
+
+def compare(base_rows, head_rows, tolerance: float):
+    """Yields (kind, name, detail) for every difference worth printing."""
+    for name in sorted(set(base_rows) | set(head_rows)):
+        if name not in head_rows:
+            yield "removed", name, f"was {base_rows[name]}"
+            continue
+        if name not in base_rows:
+            yield "added", name, f"now {head_rows[name]}"
+            continue
+        b, h = as_number(base_rows[name]), as_number(head_rows[name])
+        if b is None or h is None:
+            if base_rows[name] != head_rows[name]:
+                yield "changed", name, f"{base_rows[name]} -> {head_rows[name]}"
+            continue
+        if b == 0.0:
+            if h != 0.0:
+                yield "changed", name, f"{b} -> {h}"
+            continue
+        rel = (h - b) / abs(b)
+        if abs(rel) > tolerance:
+            yield "changed", name, f"{b} -> {h} ({rel:+.0%})"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("base", help="baseline BENCH_smoke.json")
+    ap.add_argument("head", help="candidate BENCH_smoke.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative change below this is noise (default 0.25)")
+    ap.add_argument("--fail-on-change", action="store_true",
+                    help="exit 1 when any row moved beyond tolerance")
+    args = ap.parse_args(argv)
+
+    base_rows, base_report = load_rows(args.base)
+    head_rows, head_report = load_rows(args.head)
+    diffs = list(compare(base_rows, head_rows, args.tolerance))
+    n_num = sum(1 for n in base_rows if as_number(base_rows[n]) is not None)
+    print(f"compared {len(set(base_rows) & set(head_rows))} shared rows "
+          f"({n_num} numeric in base), tolerance {args.tolerance:.0%}")
+    for section, body in head_report.get("sections", {}).items():
+        base_s = base_report.get("sections", {}).get(section, {})
+        if base_s.get("seconds") and body.get("seconds"):
+            print(f"  # {section}: {base_s['seconds']}s -> {body['seconds']}s")
+    if not diffs:
+        print("no rows moved beyond tolerance")
+        return 0
+    for kind, name, detail in diffs:
+        print(f"  {kind:8s} {name}: {detail}")
+    if head_report.get("errors"):
+        print(f"head report has section errors: {head_report['errors']}")
+    return 1 if args.fail_on_change else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,8 +15,6 @@ to the measured ~6% utilization regime.
 
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core.dataflow import GemmShape
 from repro.core.gemmini_model import GemminiConfig, GemminiModel
 from repro.core.simulator import OpenGeMMSimulator

@@ -14,7 +14,6 @@ Run:  PYTHONPATH=src python examples/int8_deployment.py
 """
 
 import jax
-import numpy as np
 
 from repro import configs, quant
 from repro.data import SyntheticLMData

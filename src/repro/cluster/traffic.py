@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 

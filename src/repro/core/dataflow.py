@@ -15,7 +15,6 @@ the simulator, the benchmarks and the TPU kernel generator.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterator, Sequence, Tuple
 
 # ---------------------------------------------------------------------------

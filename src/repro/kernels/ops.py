@@ -21,7 +21,6 @@ spatial-utilization padding: the padding fraction *is* (1 - SU).
 
 from __future__ import annotations
 
-import functools
 import sys
 from typing import Optional, Tuple
 

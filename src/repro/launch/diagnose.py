@@ -25,7 +25,6 @@ def attribute(text: str, top: int = 15):
 
     # multipliers (same walk as hlo_cost.analyze)
     refs = {}
-    trips = {}
     for comp in comps.values():
         out = []
         for op in comp.ops:
@@ -88,12 +87,11 @@ def main():
         import repro.launch.dryrun as dr
 
         dump = args.hlo or f"/tmp/hlo_{args.arch}_{args.shape}_{args.mesh}.txt"
-        res = dr.run_cell(args.arch, args.shape, args.mesh, verbose=True,
-                          dump_hlo=dump)
+        dr.run_cell(args.arch, args.shape, args.mesh, verbose=True,
+                    dump_hlo=dump)
         text = open(dump).read()
     rows, count = attribute(text, args.top)
-    total = sum(v for _, v in rows)
-    print(f"\ntop collective sources (bytes/device x trips):")
+    print("\ntop collective sources (bytes/device x trips):")
     for k, v in rows:
         print(f"  {v/1e9:9.2f} GB  x{count[k]:<6d} {k[:120]}")
 

@@ -16,7 +16,10 @@ import jax
 
 # TPU v5e-class hardware constants used by the roofline analysis.
 # Single source of truth: repro.core.hw (shared with the tile autotuner).
-from repro.core.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: F401
+from repro.core.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16",
+           "make_production_mesh", "make_local_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):

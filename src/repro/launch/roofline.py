@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.launch import mesh as mesh_lib
 

@@ -135,7 +135,8 @@ def serve_cluster(cfg, args) -> None:
         block_size=args.block_size, num_blocks=args.kv_blocks or None,
         max_chunk=args.chunk, autotune=args.autotune,
         tune_mode=args.tune_mode, precision=args.precision,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache,
+        speculative=args.draft_k if args.speculative else False)
     t0 = time.time()
     pool.warmup(verbose=True)
     print(f"warmup: {args.replicas} replicas in {time.time() - t0:.1f}s "
@@ -191,6 +192,14 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", action="store_true",
                     help="reuse prefilled KV blocks across requests sharing "
                          "a prompt prefix (attention-only archs)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding: a prompt-lookup n-gram "
+                         "drafter proposes tokens and one batched verify "
+                         "step scores them (greedy-token-identical; see "
+                         "README §Speculative)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max drafted tokens per request per tick "
+                         "(with --speculative)")
     ap.add_argument("--max-pending", type=int, default=0,
                     help="cluster backpressure: in-flight request bound "
                          "(0 = unbounded; overflow is shed)")
@@ -209,6 +218,7 @@ def main(argv=None):
         autotune=args.autotune, tune_mode=args.tune_mode,
         precision=args.precision,
         prefix_cache=args.prefix_cache,
+        speculative=args.draft_k if args.speculative else False,
         verbose=True,
     )
     t0 = time.time()

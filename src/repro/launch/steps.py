@@ -8,7 +8,7 @@ one definition, both uses.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +65,23 @@ def make_paged_serve_step(cfg: ArchConfig):
         return M.paged_decode_step(params, cfg, state, tokens, active)
 
     return paged_serve_step
+
+
+def make_paged_verify_step(cfg: ArchConfig):
+    """Speculative-decoding verification: score (B, S) drafted tokens — the
+    last committed token plus S-1 draft guesses per slot — in one paged
+    forward pass and greedily accept the longest matching prefix.
+
+    The same python callable serves every draft bucket S — jit (or the
+    engine's warmup) specializes per shape, exactly like the prefill-chunk
+    buckets."""
+
+    def paged_verify_step(params, state: M.PagedDecodeState, tokens, active,
+                          limits, eos):
+        return M.paged_verify_step(params, cfg, state, tokens, active,
+                                   limits, eos)
+
+    return paged_verify_step
 
 
 def make_prefill_chunk_step(cfg: ArchConfig):

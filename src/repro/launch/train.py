@@ -14,7 +14,6 @@ import json
 import time
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.data import SyntheticLMData

@@ -14,7 +14,6 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
 from repro.models import layers
 from repro.parallel.logical import shard
 

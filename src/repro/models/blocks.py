@@ -80,8 +80,15 @@ def apply_block(
     encoder_out: Optional[jax.Array] = None,
     cross_cache: Optional[attn_lib.KVCache] = None,
     block_tables: Optional[jax.Array] = None,
+    collect_states: bool = False,
 ) -> Tuple[jax.Array, Any]:
-    """Returns (x, new_mixer_cache).  cache is the mixer state (KV / SSM)."""
+    """Returns (x, new_mixer_cache).  cache is the mixer state (KV / SSM).
+
+    ``collect_states`` asks recurrent mixers for per-position states (an
+    extra (S,) axis on every state leaf) instead of the final state —
+    speculative verification selects the state at the accepted position.
+    Attention kinds ignore it (the paged KV pool is positional already).
+    """
     h = _norm(x, p["norm1"], cfg)
     if kind in ("attn", "attn_local"):
         window = cfg.local_window if kind == "attn_local" else None
@@ -91,11 +98,14 @@ def apply_block(
             cache_index=cache_index, block_tables=block_tables,
         )
     elif kind == "mamba":
-        h, new_cache = ssm.mamba_block(h, p["mixer"], cfg, state=cache)
+        h, new_cache = ssm.mamba_block(h, p["mixer"], cfg, state=cache,
+                                       collect_states=collect_states)
     elif kind == "mlstm":
-        h, new_cache = ssm.mlstm_block(h, p["mixer"], cfg, state=cache)
+        h, new_cache = ssm.mlstm_block(h, p["mixer"], cfg, state=cache,
+                                       collect_states=collect_states)
     elif kind == "slstm":
-        h, new_cache = ssm.slstm_block(h, p["mixer"], cfg, state=cache)
+        h, new_cache = ssm.slstm_block(h, p["mixer"], cfg, state=cache,
+                                       collect_states=collect_states)
     else:
         raise ValueError(kind)
     if cfg.post_block_norm:
@@ -138,7 +148,7 @@ def init_group(key, cfg, *, cross_attention: bool = False):
 def apply_group(
     x, gp, cfg, *, positions, causal=True, prefix_len=0,
     caches=None, cache_index=None, encoder_out=None, cross_caches=None,
-    block_tables=None,
+    block_tables=None, collect_states=False,
 ):
     """Apply one group of cfg.group_size blocks; returns (x, new_caches)."""
     kinds = cfg.layer_kinds()
@@ -152,6 +162,7 @@ def apply_group(
             encoder_out=encoder_out,
             cross_cache=None if cross_caches is None else cross_caches[i],
             block_tables=block_tables,
+            collect_states=collect_states,
         )
         new_caches.append(nc)
     return x, tuple(new_caches)

@@ -147,7 +147,6 @@ class ArchConfig:
         d, v = self.d_model, self.vocab
         hd = self.resolved_head_dim
         n = v * d * (1 if self.tie_embeddings else 2)
-        per_kind = {}
         attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
         ffn = 3 * d * self.d_ff if self.mlp_variant == "swiglu" else 2 * d * self.d_ff
         moe = 0

@@ -324,7 +324,8 @@ def init_paged_decode_state(
     )
 
 
-def _trunk_step(params, cfg, x, positions, caches, cache_index, block_tables):
+def _trunk_step(params, cfg, x, positions, caches, cache_index, block_tables,
+                collect_states=False):
     """Scan the block groups in decode mode; returns (hidden, new_caches)."""
 
     def body(h, xs):
@@ -332,6 +333,7 @@ def _trunk_step(params, cfg, x, positions, caches, cache_index, block_tables):
         h, new_caches = blocks.apply_group(
             h, gp, cfg, positions=positions, causal=True,
             caches=gcache, cache_index=cache_index, block_tables=block_tables,
+            collect_states=collect_states,
         )
         return h, new_caches
 
@@ -394,6 +396,99 @@ def _select_slots(active, new_caches, old_caches):
             return jnp.where(mask, a, b)
 
         out.append(jax.tree_util.tree_map(sel, n, o))
+    return tuple(out)
+
+
+def paged_verify_step(
+    params, cfg: ArchConfig, state: PagedDecodeState, tokens: jax.Array,
+    active: jax.Array, limits: jax.Array, eos: jax.Array,
+) -> Tuple[jax.Array, jax.Array, PagedDecodeState]:
+    """Score S drafted positions per slot in ONE paged forward pass and
+    greedily accept the longest matching prefix — speculative decoding's
+    batched verification.
+
+    Where ``paged_decode_step`` issues an M=slots GEMV per token, this step
+    runs every hot matmul at M = slots * S — the software analogue of the
+    paper's output buffering / input pre-fetching: K sequential ticks of
+    starved GEMV become one well-fed GEMM (see README §Speculative).
+
+    Inputs per slot row:
+      tokens (B, S) int32 — [last committed token, d_1 .. d_{S-1}]: the not-
+        yet-consumed tail token followed by the drafter's S-1 guesses.  Rows
+        with fewer real drafts pad arbitrarily and bound acceptance via
+        ``limits``.
+      active (B,) bool   — slots decoding this tick (others fully held).
+      limits (B,) int32  — max tokens this slot may emit this tick (>= 1 for
+        active slots; caps acceptance at request max_new and draft length).
+      eos    (B,) int32  — per-slot EOS id, -1 for none; emission stops at
+        the first EOS so host and device lengths never diverge.
+
+    Returns (greedy (B, S) int32, n_new (B,) int32, new_state):
+      greedy[i, :n_new[i]] are slot i's committed tokens this tick —
+      identical to what n_new[i] successive ``paged_decode_step`` calls
+      would emit under greedy decoding (token-identity is tested per
+      family).  KV for all S positions is written through the block tables;
+      positions at/after the new length hold rejected-draft garbage that the
+      causal length mask hides until a later write replaces it (exactly the
+      inactive-slot convention of ``paged_decode_step``).  Recurrent (SSM /
+      xLSTM) layers cannot be masked after the fact, so their per-position
+      states are collected during the pass and the state at the accepted
+      position is selected — checkpoint-and-restore at token granularity,
+      not KV rewind.
+    """
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    positions = state.lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x, per_pos = _trunk_step(
+        params, cfg, x, positions, state.caches, state.lengths,
+        state.block_tables, collect_states=True,
+    )
+    x = blocks._norm(x, params["final_norm"], cfg)
+    logits = _unembed(x, params, cfg)                       # (B, S, vocab)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, S)
+
+    # Greedy acceptance: drafted token i is kept iff it equals the model's
+    # argmax at the previous position (given all earlier drafts, which the
+    # causal mask already conditioned on); the run stops at the first miss.
+    match = (tokens[:, 1:] == greedy[:, :-1]).astype(jnp.int32)   # (B, S-1)
+    acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)             # drafts kept
+    acc = jnp.minimum(acc, jnp.maximum(limits, 1) - 1)
+    # One bonus token always falls out of the last accepted position; clamp
+    # emission at the first EOS so the host never records past it.
+    emit = jnp.arange(S, dtype=jnp.int32)[None, :] <= acc[:, None]
+    eos_hit = (greedy == eos[:, None]) & emit
+    first_eos = jnp.argmax(eos_hit, axis=1).astype(jnp.int32)
+    n_new = jnp.where(jnp.any(eos_hit, axis=1), first_eos + 1, acc + 1)
+    n_new = jnp.where(active, n_new, 0).astype(jnp.int32)
+
+    sel = jnp.maximum(n_new - 1, 0)       # state after the n_new-th token
+    caches = _commit_verified(active, sel, per_pos, state.caches)
+    return greedy, n_new, PagedDecodeState(
+        caches=caches, block_tables=state.block_tables,
+        lengths=state.lengths + n_new,
+    )
+
+
+def _commit_verified(active, idx, per_pos_caches, old_caches):
+    """Select each slot's recurrent state at its accepted position (leaves
+    (G, B, S, ...) -> (G, B, ...)); inactive slots revert to their old
+    state.  Paged KV pools pass through — rejected-position writes sit
+    beyond the committed length, invisible until overwritten."""
+    from repro.serving.kv_cache import PagedKVCache
+
+    out = []
+    for n, o in zip(per_pos_caches, old_caches):
+        if isinstance(n, PagedKVCache):
+            out.append(n)
+            continue
+
+        def commit(a, b):
+            i = idx.reshape((1, -1, 1) + (1,) * (a.ndim - 3))
+            picked = jnp.take_along_axis(a, i, axis=2)[:, :, 0]
+            mask = active.reshape((1, -1) + (1,) * (picked.ndim - 2))
+            return jnp.where(mask, picked, b)
+
+        out.append(jax.tree_util.tree_map(commit, n, o))
     return tuple(out)
 
 

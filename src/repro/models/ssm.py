@@ -75,6 +75,7 @@ def mamba_block(
     *,
     state: Optional[MambaState] = None,
     chunk: int = 16,
+    collect_states: bool = False,
 ) -> Tuple[jax.Array, Optional[MambaState]]:
     """x: (B, S, d) -> (B, S, d).
 
@@ -83,6 +84,10 @@ def mamba_block(
     state given, S > 1  -> chunked prefill: advance the carried state by S
     tokens with the chunked selective scan (conv context and h both resume
     from the state), returning the updated state.
+
+    ``collect_states`` (requires a carried state) returns a MambaState with
+    an extra position axis — h/conv *after every token* (B, S, ...) — so
+    speculative verification can restore the state at any accepted position.
     """
     B, S, d = x.shape
     mc = cfg.mamba
@@ -91,7 +96,7 @@ def mamba_block(
     x_in, z = jnp.split(xz, 2, axis=-1)         # (B, S, di) each
     x_in = shard(x_in, "batch", "seq", "mlp")
 
-    if state is not None and S == 1:
+    if state is not None and S == 1 and not collect_states:
         # --- decode: O(1) update --------------------------------------------
         conv_ctx = jnp.concatenate([state.conv, x_in.astype(state.conv.dtype)], axis=1)
         w = p["conv_w"].astype(jnp.float32)     # (dc, di)
@@ -139,6 +144,8 @@ def mamba_block(
         pA, pBx = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
         h_c = pA * h[:, None] + pBx             # (B, chunk, di, ds)
         y_c = jnp.einsum("bcds,bcs->bcd", h_c, C_c)
+        if collect_states:
+            return h_c[:, -1], (y_c, h_c)
         return h_c[:, -1], y_c
 
     resh = lambda t: jnp.moveaxis(t.reshape(B, n_chunks, chunk, *t.shape[2:]), 1, 0)
@@ -147,12 +154,21 @@ def mamba_block(
     # checkpoint: backward recomputes one chunk at a time; only the per-chunk
     # carry states (B, di, ds) are saved across the sequence.
     h_final, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, resh(xc))
+    per_pos = None
+    if collect_states:
+        assert state is not None, "collect_states needs a carried state"
+        ys, h_all = ys                          # h_all: (n_chunks, B, chunk, di, ds)
+        h_pos = jnp.moveaxis(h_all, 0, 1).reshape(B, S, di, mc.d_state)
+        # Conv tail after token j is the last (d_conv - 1) inputs up to j —
+        # a slice of xp, which already prepends the carried tail.
+        conv_pos = jnp.stack([xp[:, j + 1: j + dc] for j in range(S)], axis=1)
+        per_pos = MambaState(h=h_pos, conv=conv_pos.astype(tail.dtype))
     y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
     y = y + p["D"] * xc.astype(jnp.float32)
     out = layers.dense((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["w_out"])
     new_state = (MambaState(h=h_final, conv=xp[:, S:].astype(tail.dtype))
                  if state is not None else None)
-    return shard(out, "batch", "seq", "embed"), new_state
+    return shard(out, "batch", "seq", "embed"), (per_pos if collect_states else new_state)
 
 
 def init_mamba_state(cfg, batch: int) -> MambaState:
@@ -168,7 +184,8 @@ def init_mamba_state(cfg, batch: int) -> MambaState:
 # xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
 # ---------------------------------------------------------------------------
 
-def _chunked_scan(step_fn, init_state, seq_tensors, S: int, chunk: int = 64):
+def _chunked_scan(step_fn, init_state, seq_tensors, S: int, chunk: int = 64,
+                  collect_states: bool = False):
     """Two-level recurrent scan: outer over chunks (carries saved), inner
     over tokens inside a jax.checkpoint'd chunk body.
 
@@ -178,6 +195,12 @@ def _chunked_scan(step_fn, init_state, seq_tensors, S: int, chunk: int = 64):
 
     seq_tensors: pytree of (B, S, ...) arrays; returns (final_state, ys)
     with ys stacked back to (B, S, ...).
+
+    ``collect_states`` makes ys ``(ys, states)`` where ``states`` carries the
+    recurrent state *after every token* (leaves (B, S, ...)).  Speculative
+    verification needs this: on a partial draft acceptance the engine restores
+    the state at the accepted position — checkpoint-and-restore of the
+    recurrence, at token granularity (models/model.py::paged_verify_step).
     """
     chunk = min(chunk, S)
     while S % chunk:
@@ -191,14 +214,24 @@ def _chunked_scan(step_fn, init_state, seq_tensors, S: int, chunk: int = 64):
 
     xs = jax.tree_util.tree_map(to_chunks, seq_tensors)
 
+    if collect_states:
+        base_step = step_fn
+
+        def step_fn(s, t):
+            ns, y = base_step(s, t)
+            return ns, (y, ns)
+
     def chunk_body(state, chunk_xs):
         state, ys = jax.lax.scan(step_fn, state, chunk_xs)
         return state, ys
 
     final, ys = jax.lax.scan(jax.checkpoint(chunk_body), init_state, xs)
-    # ys: (n_chunks, chunk, B, ...) -> (B, S, ...)
-    ys = ys.reshape(n_chunks * chunk, *ys.shape[2:])
-    return final, jnp.moveaxis(ys, 0, 1)
+
+    def merge(t):  # (n_chunks, chunk, B, ...) -> (B, S, ...)
+        t = t.reshape(n_chunks * chunk, *t.shape[2:])
+        return jnp.moveaxis(t, 0, 1)
+
+    return final, jax.tree_util.tree_map(merge, ys)
 
 class MLSTMState(NamedTuple):
     C: jax.Array   # (B, H, hd, hd) matrix memory
@@ -217,7 +250,6 @@ def init_mlstm(key, cfg):
     d = cfg.d_model
     di = 2 * d                       # up-projection factor 2 (xLSTM block)
     H = cfg.n_heads
-    hd = di // H
     ks = jax.random.split(key, 7)
     dt = cfg.jax_dtype
     return {
@@ -233,8 +265,13 @@ def init_mlstm(key, cfg):
     }
 
 
-def mlstm_block(x, p, cfg, *, state: Optional[MLSTMState] = None):
-    """mLSTM block: up-proj, matrix-memory recurrence, gated down-proj."""
+def mlstm_block(x, p, cfg, *, state: Optional[MLSTMState] = None,
+                collect_states: bool = False):
+    """mLSTM block: up-proj, matrix-memory recurrence, gated down-proj.
+
+    ``collect_states`` (requires a carried state) returns an MLSTMState with
+    an extra position axis (leaves (B, S, ...)): the state after every token,
+    for speculative-verification restore at the accepted position."""
     B, S, d = x.shape
     di = 2 * d
     H = cfg.n_heads
@@ -284,7 +321,12 @@ def mlstm_block(x, p, cfg, *, state: Optional[MLSTMState] = None):
         h = hs.reshape(B, S, di).astype(x.dtype)
         new_state = None
     else:
-        new_state, hs = _chunked_scan(step, st, (q, k, v, i_pre, f_pre), S)
+        assert state is not None or not collect_states, \
+            "collect_states needs a carried state"
+        new_state, hs = _chunked_scan(step, st, (q, k, v, i_pre, f_pre), S,
+                                      collect_states=collect_states)
+        if collect_states:
+            hs, new_state = hs
         h = hs.reshape(B, S, di).astype(x.dtype)
     out = layers.dense(h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["w_down"])
     return shard(out, "batch", "seq", "embed"), (new_state if state is not None else None)
@@ -369,8 +411,13 @@ def init_slstm(key, cfg):
     return p
 
 
-def slstm_block(x, p, cfg, *, state: Optional[SLSTMState] = None):
-    """sLSTM block: scalar-memory LSTM with head-wise recurrence + GLU FFN."""
+def slstm_block(x, p, cfg, *, state: Optional[SLSTMState] = None,
+                collect_states: bool = False):
+    """sLSTM block: scalar-memory LSTM with head-wise recurrence + GLU FFN.
+
+    ``collect_states`` (requires a carried state) returns an SLSTMState with
+    an extra position axis (leaves (B, S, ...)): the state after every token,
+    for speculative-verification restore at the accepted position."""
     B, S, d = x.shape
     H = cfg.n_heads
     hd = d // H
@@ -412,7 +459,12 @@ def slstm_block(x, p, cfg, *, state: Optional[SLSTMState] = None):
         h = o_t * c / jnp.maximum(n, 1.0)
         return SLSTMState(c, n, h, m_new), h
 
-    new_state, hs = _chunked_scan(step, st, pre, S)
+    assert state is not None or not collect_states, \
+        "collect_states needs a carried state"
+    new_state, hs = _chunked_scan(step, st, pre, S,
+                                  collect_states=collect_states)
+    if collect_states:
+        hs, new_state = hs
     h = hs.reshape(B, S, d).astype(x.dtype)
     # GLU feed-forward (proj factor 4/3, xLSTM-style), fused into the block.
     up = layers.dense(h, p["w_ff_up"])

@@ -22,14 +22,14 @@ Typical deployment (the serving engine does exactly this under
 sys.modules); `calibrate`/`report` pull in the model layer and stay lazy.
 """
 
-from repro.quant import modes  # noqa: F401
-from repro.quant.modes import (  # noqa: F401
+from repro.quant import modes
+from repro.quant.modes import (
     MODES,
     get_mode,
     precision,
     set_mode,
 )
-from repro.quant.params import (  # noqa: F401
+from repro.quant.params import (
     QUANT_KEYS,
     QuantTensor,
     dequantize_params,
@@ -38,6 +38,23 @@ from repro.quant.params import (  # noqa: F401
     quantized_leaf_count,
     weight_bytes,
 )
+
+# Eager re-exports plus the lazy table below; pyflakes reads re-exports off
+# __all__ (bare pyflakes has no noqa support).
+__all__ = [
+    "modes",
+    "MODES",
+    "get_mode",
+    "precision",
+    "set_mode",
+    "QUANT_KEYS",
+    "QuantTensor",
+    "dequantize_params",
+    "quantize_leaf",
+    "quantize_params",
+    "quantized_leaf_count",
+    "weight_bytes",
+]
 
 # NB: "calibrate"/"report" resolve to the submodules (import machinery would
 # overwrite a same-named function attribute on first import anyway); the
@@ -54,6 +71,8 @@ _LAZY = {
     "eval_nll": ("repro.quant.report", "eval_nll"),
     "report": ("repro.quant.report", None),
 }
+
+__all__ += sorted(_LAZY)
 
 
 def __getattr__(name: str):

@@ -16,7 +16,7 @@ the engine/scheduler live behind a lazy ``__getattr__`` so the model layer
 never pulls in its own callers.
 """
 
-from repro.serving.kv_cache import (  # noqa: F401
+from repro.serving.kv_cache import (
     BlockAllocator,
     BlockTables,
     NULL_BLOCK,
@@ -30,16 +30,38 @@ from repro.serving.kv_cache import (  # noqa: F401
     write_kv,
 )
 
+# The eager kv_cache re-exports plus the lazy table below; pyflakes reads
+# re-exports off __all__ (bare pyflakes has no noqa support).
+__all__ = [
+    "BlockAllocator",
+    "BlockTables",
+    "NULL_BLOCK",
+    "PagedKVCache",
+    "blocks_for",
+    "copy_blocks",
+    "default_pool_blocks",
+    "fork_blocks",
+    "gather_kv",
+    "init_paged_kv",
+    "write_kv",
+]
+
 _LAZY = {
     "Engine": ("repro.serving.engine", "Engine"),
     "EngineMetrics": ("repro.serving.engine", "EngineMetrics"),
+    "NgramDrafter": ("repro.serving.speculative", "NgramDrafter"),
     "Request": ("repro.serving.scheduler", "Request"),
     "RequestMetrics": ("repro.serving.engine", "RequestMetrics"),
     "Scheduler": ("repro.serving.scheduler", "Scheduler"),
+    "SpecConfig": ("repro.serving.speculative", "SpecConfig"),
     "plan_chunks": ("repro.serving.prefill", "plan_chunks"),
     "chunk_buckets": ("repro.serving.prefill", "chunk_buckets"),
     "percentile": ("repro.serving.engine", "percentile"),
+    "verify_buckets": ("repro.serving.speculative", "verify_buckets"),
 }
+
+
+__all__ += sorted(_LAZY)
 
 
 def __getattr__(name: str):

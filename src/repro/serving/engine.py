@@ -45,6 +45,12 @@ from repro.models import model as M
 from repro.serving import kv_cache as kvc
 from repro.serving.prefill import chunk_buckets
 from repro.serving.scheduler import Phase, Request, Scheduler
+from repro.serving.speculative import (
+    NgramDrafter,
+    bucket_for,
+    coerce_spec,
+    verify_buckets,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +179,9 @@ class EngineMetrics:
     prefix_lookups: int = 0       # admissions that consulted the prefix cache
     prefix_hits: int = 0          # admissions seeded from a cached prefix
     prefix_hit_tokens: int = 0    # prompt tokens whose prefill was skipped
+    spec_ticks: int = 0           # decode ticks that ran batched verification
+    spec_draft_tokens: int = 0    # draft tokens proposed to the verifier
+    spec_accepted_tokens: int = 0  # draft tokens verification accepted
     requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
 
     @property
@@ -195,6 +204,19 @@ class EngineMetrics:
     @property
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / max(1, self.prefix_lookups)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens that survived verification."""
+        return self.spec_accepted_tokens / max(1, self.spec_draft_tokens)
+
+    @property
+    def decode_tok_per_tick(self) -> float:
+        """Mean committed tokens per decode tick, summed across slots: one
+        token per *active slot* per tick without speculation; up to
+        slots x (accepted + 1) with it — the utilization metric batched
+        verification moves."""
+        return self.decode_tokens / max(1, self.decode_steps)
 
     def summary(self) -> str:
         n = len(self.requests)
@@ -219,6 +241,12 @@ class EngineMetrics:
             out += (
                 f" prefix_hits={self.prefix_hits}/{self.prefix_lookups} "
                 f"({self.prefix_hit_tokens} tok reused)"
+            )
+        if self.spec_ticks:
+            out += (
+                f" spec_ticks={self.spec_ticks}/{self.decode_steps} "
+                f"accept={self.acceptance_rate:.0%} "
+                f"tok/tick={self.decode_tok_per_tick:.2f}"
             )
         if self.precision != "float":
             saved = (1.0 - self.weight_bytes / self.weight_bytes_float
@@ -256,6 +284,7 @@ class Engine:
         calib_batches=None,
         max_queue: Optional[int] = None,
         prefix_cache=False,
+        speculative=False,
         seed: int = 0,
         verbose: bool = False,
     ):
@@ -284,6 +313,13 @@ class Engine:
         self.autotune = autotune
         self.tune_mode = tune_mode
         self.verbose = verbose
+
+        # Speculative decoding (serving/speculative.py): a model-free
+        # prompt-lookup drafter proposes up to spec.k tokens per request per
+        # tick; one batched verify step scores them all.  False/None -> off,
+        # True -> defaults, int -> draft length K, SpecConfig -> as given.
+        self.spec = coerce_spec(speculative)
+        self.drafter = NgramDrafter(self.spec) if self.spec else None
 
         self.scheduler = Scheduler(slots, max_chunk=max_chunk, max_queue=max_queue)
         self.alloc = kvc.BlockAllocator(self.num_blocks, block_size)
@@ -337,6 +373,8 @@ class Engine:
             steps_lib.make_paged_serve_step(cfg), donate_argnums=(1,))
         self._chunk_fn = jax.jit(
             steps_lib.make_prefill_chunk_step(cfg), donate_argnums=(1,))
+        self._verify_fn = jax.jit(
+            steps_lib.make_paged_verify_step(cfg), donate_argnums=(1,))
         self._reset_fn = jax.jit(
             lambda state, mask: M.reset_slots(cfg, state, mask),
             donate_argnums=(0,))
@@ -361,6 +399,7 @@ class Engine:
         per engine.  The single place that knows the step-field list."""
         self._decode_fn = other._decode_fn
         self._chunk_fn = other._chunk_fn
+        self._verify_fn = other._verify_fn
         self._reset_fn = other._reset_fn
 
     # -- warmup: the configuration-pre-loading analogue ----------------------
@@ -405,6 +444,17 @@ class Engine:
                 _, state = self._chunk_fn(
                     self.params, state, jnp.zeros((1, c), jnp.int32), slot0)
                 self._warmed.add(f"chunk{c}")
+            if self.spec is not None:
+                # Every verify width the drafter can produce (speculative
+                # K buckets), compiled before traffic like the chunk sizes.
+                lim = jnp.ones((self.slots,), jnp.int32)
+                no_eos = jnp.full((self.slots,), -1, jnp.int32)
+                for s in verify_buckets(self.spec.k):
+                    _, _, state = self._verify_fn(
+                        self.params, state,
+                        jnp.zeros((self.slots, s), jnp.int32), active,
+                        lim, no_eos)
+                    self._warmed.add(f"verify{s}")
             state = self._reset_fn(state, jnp.zeros((self.slots,), bool))
             self._warmed.add("reset")
             jax.block_until_ready(state)
@@ -414,8 +464,10 @@ class Engine:
             max_blocks_per_slot=self.max_blocks_per_slot)
         self.metrics.aot_steps = len(self._warmed)
         if self.verbose:
+            extra = (f" + verify {verify_buckets(self.spec.k)}"
+                     if self.spec is not None else "")
             print(f"warmup: {len(self._warmed)} step shapes compiled "
-                  f"(decode + chunks {buckets} + reset)"
+                  f"(decode + chunks {buckets}{extra} + reset)"
                   + (f" [{self.precision}]" if self.precision != "float" else ""))
 
     def _precision_ctx(self):
@@ -571,6 +623,12 @@ class Engine:
         unused = max(0, self._reserved.pop(req.rid, fresh_drawn) - fresh_drawn)
         self.tables.release(slot, self.alloc, unreserve=unused)
         self.results[req.rid] = np.asarray(req.out_tokens, np.int32)
+        if self.drafter is not None:
+            # Committed stream into the drafter corpus: greedy decoding is
+            # deterministic, so a later repeat/templated request re-generates
+            # this stream and the drafter proposes its true continuation.
+            self.drafter.remember(
+                np.concatenate([req.prompt, self.results[req.rid]]))
         now = time.monotonic()
         t_submit = self._submit_t.pop(req.rid)   # fully consumed here; a
         t_first = self._first_tok_t.pop(req.rid, now)  # long-lived engine
@@ -590,6 +648,84 @@ class Engine:
         self._last_token[req.slot if req.slot >= 0 else 0] = token
         if req.phase is Phase.FINISHED:
             self._finish(req)
+
+    # -- speculative decode: draft -> verify -> rollback ---------------------
+
+    def _decode_speculative(self, reqs: List[Request]) -> bool:
+        """One speculative decode tick over the decoding slots: the n-gram
+        drafter proposes per-request continuations, one batched verify step
+        scores every drafted position, and rejected-position KV blocks are
+        rolled back.  Returns False (without touching the device) when no
+        request drafted anything — the caller falls through to the plain
+        decode step, so incompressible traffic pays zero speculative
+        overhead beyond the host-side lookup."""
+        drafts: Dict[int, np.ndarray] = {}
+        for r in reqs:
+            if r.remaining > 1:    # a 1-token budget can't use a draft
+                # remaining - 1: the bonus token always rides along, so the
+                # last draft a request could accept is its (remaining-1)-th —
+                # drafting more only widens the verify GEMM for nothing.
+                d = self.drafter.draft(r.context,
+                                       k=min(self.spec.k, r.remaining - 1))
+                if len(d):
+                    drafts[r.rid] = d
+        if not drafts:
+            return False
+        width = bucket_for(max(len(d) for d in drafts.values()), self.spec.k)
+        tokens = np.zeros((self.slots, width), np.int32)
+        limits = np.zeros((self.slots,), np.int32)
+        eos = np.full((self.slots,), -1, np.int32)
+        active = np.zeros((self.slots,), bool)
+        for r in reqs:
+            d = drafts.get(r.rid)
+            nd = 0 if d is None else len(d)
+            # Real draft positions need covered blocks (writes at
+            # r.length - 1 .. r.length - 1 + nd); padding columns beyond the
+            # draft resolve to the null block and need none.
+            self.tables.ensure(r.slot, r.length + nd, self.alloc)
+            tokens[r.slot, 0] = self._last_token[r.slot]
+            if nd:
+                tokens[r.slot, 1:1 + nd] = d
+            limits[r.slot] = min(nd + 1, r.remaining)
+            eos[r.slot] = -1 if r.eos_token is None else r.eos_token
+            active[r.slot] = True
+        self._sync_tables()
+        t_dec = time.monotonic()
+        # numpy args go straight into the jitted call: the C++ fast path
+        # converts them in ~µs, where a standalone jnp.asarray dispatches an
+        # un-jitted XLA copy (~100-700µs each on CPU — real money against a
+        # ~1ms verify step).
+        greedy, n_new, self.state = self._run_compiled(
+            f"verify{width}", self._verify_fn, self.params, self.state,
+            tokens, active, limits, eos)
+        greedy, n_new = np.asarray(greedy), np.asarray(n_new)
+        self.metrics.decode_time_s += time.monotonic() - t_dec
+        emitted = 0
+        for r in reqs:
+            slot, n = r.slot, int(n_new[r.slot])
+            drafted = len(drafts.get(r.rid, ()))
+            self.scheduler.on_spec(r, drafted, max(0, n - 1))
+            self.metrics.spec_draft_tokens += drafted
+            self.metrics.spec_accepted_tokens += max(0, n - 1)
+            for t in greedy[slot, :n]:
+                self._record_token(r, int(t))
+            emitted += n
+            # Rollback: blocks drawn for rejected draft positions go back to
+            # the pool (and this request's reservation).  A finished request
+            # released everything already; an accept-all tick may legally
+            # need *more* blocks than it holds (covered by next tick's
+            # ensure), hence the guard.
+            if r.phase is not Phase.FINISHED:
+                held = len(self.tables.blocks[slot])
+                if kvc.blocks_for(r.length, self.block_size) < held:
+                    _, pair = self.tables.rewind(slot, r.length, self.alloc)
+                    # The engine only ever speculates past the shared-prefix
+                    # boundary, so divergence cannot trigger here.
+                    assert pair is None, "spec rewind crossed a shared block"
+        self.metrics.decode_steps += 1
+        self.metrics.decode_tokens += emitted
+        self.metrics.spec_ticks += 1
+        return True
 
     # -- the serve loop ------------------------------------------------------
 
@@ -628,6 +764,8 @@ class Engine:
                 # numpy copy — slicing a device array dispatches un-jitted
                 # primitives that would compile tiny kernels at serve time.
                 self._record_token(req, int(np.argmax(np.asarray(logits)[0, -1])))
+        elif self.spec is not None and self._decode_speculative(action[1]):
+            pass                              # spec tick ran (metrics inside)
         else:
             _, reqs = action
             # The step writes at position r.length - 1 (the last recorded
@@ -636,13 +774,16 @@ class Engine:
             for r in reqs:
                 self.tables.ensure(r.slot, r.length, self.alloc)
             self._sync_tables()
-            tokens = jnp.asarray(self._last_token[:, None])
+            # numpy args feed the jitted call directly — see the note in
+            # _decode_speculative; an explicit jnp.asarray here costs more
+            # than the decode step's own dispatch.
+            tokens = self._last_token[:, None]
             active = np.zeros((self.slots,), bool)
             active[[r.slot for r in reqs]] = True
             t_dec = time.monotonic()
             logits, self.state = self._run_compiled(
                 "decode", self._decode_fn, self.params, self.state, tokens,
-                jnp.asarray(active))
+                active)
             next_tok = np.argmax(np.asarray(logits)[:, -1], axis=-1)
             self.metrics.decode_time_s += time.monotonic() - t_dec
             for r in reqs:

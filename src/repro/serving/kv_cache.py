@@ -226,9 +226,20 @@ class BlockAllocator:
     def refcount(self, b: int) -> int:
         return self._refs.get(b, 0)
 
-    def free(self, ids: List[int], *, unreserve: int = 0) -> None:
+    def free(self, ids: List[int], *, unreserve: int = 0,
+             rereserve: bool = False) -> int:
         """Drop one owner per block; a block returns to the free list only
-        when its last owner frees it (shared blocks just lose a ref)."""
+        when its last owner frees it (shared blocks just lose a ref).
+
+        ``rereserve`` puts every block that actually reached the free list
+        back under the caller's admission reservation — the KV-rewind case:
+        a request returning blocks drawn for rejected speculative positions
+        must still be able to redraw them later without re-admission, or the
+        allocator's no-mid-decode-starvation guarantee breaks.  Shared
+        blocks (refcount > 1) only lose a ref and are NOT re-reserved — the
+        free list did not grow, so a reservation against it would be a lie.
+        Returns the number of blocks that reached the free list."""
+        returned = 0
         for b in ids:
             if b == NULL_BLOCK:
                 raise ValueError("cannot free the null block")
@@ -238,9 +249,13 @@ class BlockAllocator:
             if rc == 1:
                 del self._refs[b]
                 self._free.append(b)
+                returned += 1
             else:
                 self._refs[b] = rc - 1
         self._reserved = max(0, self._reserved - unreserve)
+        if rereserve:
+            self._reserved += returned
+        return returned
 
     def check(self) -> None:
         """Allocator invariant: free list and refcounted blocks partition
@@ -337,6 +352,49 @@ class BlockTables:
         self.table[slot, block_idx] = fresh
         self.dirty = True
         return b, fresh
+
+    def rewind(
+        self, slot: int, length: int, alloc: BlockAllocator, *,
+        rereserve: bool = True,
+    ) -> Tuple[int, Optional[Tuple[int, int]]]:
+        """KV rewind: shrink slot's table to cover exactly `length` tokens,
+        returning blocks past the boundary to the pool.
+
+        The rollback half of speculative decoding: blocks drawn to hold
+        drafted-token KV are handed back when the draft is (partially)
+        rejected, and — with ``rereserve`` (default) — return to the
+        request's admission reservation so later growth cannot starve.
+        Freed blocks are not zeroed: the causal length mask never exposes a
+        position the table does not cover, and every block is fully
+        re-written by its next owner before its positions become visible
+        (the same invariant slot release relies on).
+
+        Composes with CoW sharing: when the new tail block is *partial*
+        (future writes will land inside it) and shared (refcount > 1 — e.g.
+        a forked prefix block), it is diverged via ``make_writable`` so the
+        rewound slot never mutates bytes another owner is reading —
+        copy-then-rewind, never rewind-in-place.  Returns
+        ``(blocks_freed, copy_pair)`` where ``copy_pair`` is the (src, dst)
+        to clone on device via ``copy_blocks`` (None when no divergence was
+        needed).  A block-aligned `length` needs no divergence: the next
+        write starts a fresh block.
+        """
+        keep = blocks_for(length, alloc.block_size)
+        ids = self.blocks[slot]
+        if keep > len(ids):
+            raise ValueError(
+                f"slot {slot}: cannot rewind to {length} tokens "
+                f"({keep} blocks) — only {len(ids)} blocks held")
+        dropped = ids[keep:]
+        if dropped:
+            alloc.free(dropped, rereserve=rereserve)
+            del ids[keep:]
+            self.table[slot, keep:] = NULL_BLOCK
+            self.dirty = True
+        pair = None
+        if keep and length % alloc.block_size:
+            pair = self.make_writable(slot, keep - 1, alloc)
+        return len(dropped), pair
 
     def release(self, slot: int, alloc: BlockAllocator, *, unreserve: int = 0) -> int:
         """Free all of slot's blocks back to the pool; returns count freed."""

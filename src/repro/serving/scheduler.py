@@ -54,10 +54,27 @@ class Request:
     submit_step: int = 0
     first_token_step: Optional[int] = None
     finish_step: Optional[int] = None
+    # -- speculative-decoding accounting (engine's spec tick path) --
+    spec_drafted: int = 0               # draft tokens proposed over lifetime
+    spec_accepted: int = 0              # draft tokens verification accepted
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    @property
+    def remaining(self) -> int:
+        """Tokens this request may still emit."""
+        return self.max_new - len(self.out_tokens)
+
+    @property
+    def context(self) -> np.ndarray:
+        """Full committed token history (prompt + generated) — what the
+        self-speculative drafter matches n-grams over."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, np.int32)])
 
     @property
     def length(self) -> int:
@@ -163,6 +180,14 @@ class Scheduler:
         if req.done:
             req.phase = Phase.FINISHED
             req.finish_step = step
+
+    def on_spec(self, req: Request, drafted: int, accepted: int) -> None:
+        """Account one speculative verification for this request: `drafted`
+        tokens were proposed, `accepted` of them survived verification.
+        The committed tokens themselves still flow through on_token — this
+        records only the draft economics (engine acceptance-rate metrics)."""
+        req.spec_drafted += drafted
+        req.spec_accepted += accepted
 
     def release(self, req: Request) -> int:
         """Detach a finished request from its slot; returns the slot."""

@@ -27,7 +27,7 @@ from repro.core.dataflow import GemmShape
 from repro.core.generator import CASE_STUDY, OpenGeMMConfig, TpuGemmSpec, VMEM_BUDGET_BYTES
 from repro.tuning import model as tmodel
 from repro.tuning.cache import CacheEntry, TuneCache, cache_key
-from repro.tuning.candidates import dtype_bits, enumerate_tiles
+from repro.tuning.candidates import enumerate_tiles
 
 # Backends that name a real kernel specialization.  "interpret" runs the
 # "pallas" kernel under the interpreter, so it shares that tuning key.

@@ -1,7 +1,6 @@
 """Checkpointing + fault-tolerant runtime."""
 
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ from repro.core.dataflow import (
     SpatialUnrolling,
     TemporalUnrolling,
     OUTPUT_STATIONARY,
-    WEIGHT_STATIONARY,
     arithmetic_intensity,
     choose_loop_order,
     roofline_time_s,

@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine, global_norm

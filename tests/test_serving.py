@@ -167,7 +167,6 @@ def test_block_table_reuse_after_completion():
         eng.submit(rng.integers(0, cfg.vocab, size=5).astype(np.int32),
                    max_new=2)
     seen_blocks = set()
-    used_per_req = []
     while eng.scheduler.has_work:
         assert eng.tick()
         for slot_blocks in eng.tables.blocks:
@@ -233,7 +232,7 @@ def test_scheduler_interleaves_prefill_and_decode():
     # with one request decoding and one prefilling, actions alternate
     sched2 = Scheduler(slots=2, max_chunk=4)
     a = sched2.submit(np.arange(4, dtype=np.int32), max_new=8)
-    b = sched2.submit(np.arange(8, dtype=np.int32), max_new=8)
+    sched2.submit(np.arange(8, dtype=np.int32), max_new=8)
     sched2.admit(lambda req: True)
     act = sched2.next_action()           # a's only chunk
     sched2.on_prefill(a, act[2], 0)

@@ -1,0 +1,356 @@
+"""Speculative decoding tests: greedy token-identity (dense/hybrid/recurrent,
+w8a8, prefix-cache-admitted), KV rewind edge cases (reject-all/accept-all,
+block boundaries, CoW-forked blocks), drafter/bucket units, and speculative
+decode under pool pressure — with the PR 4 allocator ``check()`` invariant
+asserted throughout."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.serving import kv_cache as kvc
+from repro.serving.engine import Engine
+from repro.serving.speculative import (
+    NgramDrafter,
+    SpecConfig,
+    bucket_for,
+    coerce_spec,
+    verify_buckets,
+)
+
+FAMILY_ARCHS = ["gemma3-1b", "jamba-1.5-large-398b", "xlstm-1.3b"]
+
+
+def _params(cfg):
+    return M.init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _run_pair(cfg, params, prompts_and_gens, *, eos=None, check_every_tick=False,
+              **kw):
+    """Serve the same workload through a speculative and a plain engine;
+    returns (plain results, spec results, spec engine)."""
+    outs = []
+    for speculative in (False, SpecConfig(k=4)):
+        eng = Engine(cfg, params=params, slots=2, max_seq=64, block_size=4,
+                     max_chunk=8, speculative=speculative, **kw)
+        eng.warmup()
+        reqs = [eng.submit(p, max_new=g, eos_token=eos)
+                for p, g in prompts_and_gens]
+        if check_every_tick:
+            while eng.scheduler.has_work:
+                eng.tick()
+                eng.alloc.check()
+            res = eng.results
+        else:
+            res = eng.run()
+        eng.alloc.check()
+        if eng.prefix_cache is None:
+            assert eng.alloc.in_use == 0
+        else:
+            # only the cache's own refs remain once every slot drained
+            assert eng.alloc.in_use == eng.prefix_cache._count
+        assert eng.metrics.cold_compiles == 0
+        outs.append(({r.rid: res[r.rid] for r in reqs}, eng, reqs))
+    (plain, _, preqs), (spec, seng, sreqs) = outs
+    for p, s in zip(preqs, sreqs):
+        np.testing.assert_array_equal(plain[p.rid], spec[s.rid])
+    return plain, spec, seng
+
+
+# -- token identity across families ------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_speculative_token_identity(arch):
+    """Speculative-on greedy decoding emits exactly the tokens
+    speculative-off emits, for dense, hybrid (SSM+attention), and recurrent
+    (xLSTM) stacks — partial accepts restore the recurrent state at the
+    accepted position, not just the KV length."""
+    cfg = configs.get_smoke(arch)
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    pat = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+    work = [
+        (np.tile(pat, 4), 10),                                   # repetitive
+        (rng.integers(0, cfg.vocab, size=9).astype(np.int32), 7),  # random
+        (np.tile(pat, 4), 12),           # repeat of prompt 1: corpus drafts
+        (rng.integers(0, cfg.vocab, size=5).astype(np.int32), 6),
+    ]
+    _, _, seng = _run_pair(cfg, params, work)
+    m = seng.metrics
+    assert m.spec_ticks > 0                     # the spec path actually ran
+    assert m.spec_draft_tokens > 0
+    assert 0 < m.spec_accepted_tokens <= m.spec_draft_tokens
+
+
+def test_speculative_token_identity_with_eos():
+    """EOS emitted mid-draft stops the request exactly where non-speculative
+    decoding stops — the verify step clamps emission at the first EOS, so
+    host and device lengths never diverge."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = _params(cfg)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    # discover the greedy stream, then pick a mid-stream token as EOS so the
+    # speculative run must clamp inside an accepted draft
+    probe = Engine(cfg, params=params, slots=1, max_seq=64, block_size=4,
+                   max_chunk=8)
+    probe.warmup()
+    rid = probe.submit(prompt, max_new=12).rid
+    stream = probe.run()[rid]
+    eos = int(stream[len(stream) // 2])
+    work = [(prompt, 12), (prompt, 12)]      # repeat -> corpus drafts cover EOS
+    plain, spec, _ = _run_pair(cfg, params, work, eos=eos)
+    for toks in spec.values():
+        assert eos in toks.tolist() or len(toks) == 12
+        if eos in toks.tolist():
+            assert toks.tolist().index(eos) == len(toks) - 1  # stops AT eos
+
+
+def test_speculative_token_identity_w8a8():
+    """Speculative decoding composes with the int8 (w8a8) serving precision:
+    the verify step is traced inside the precision context at warmup and the
+    committed tokens match the non-speculative w8a8 engine's."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = _params(cfg)
+    rng = np.random.default_rng(2)
+    pat = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    work = [(np.tile(pat, 3), 8), (np.tile(pat, 3), 8)]
+    _, _, seng = _run_pair(cfg, params, work, precision="w8a8")
+    assert seng.metrics.precision == "w8a8"
+    assert seng.metrics.spec_ticks > 0
+
+
+def test_speculative_token_identity_with_prefix_cache():
+    """Speculative decoding composes with prefix-cache admission: requests
+    seeded from shared KV blocks speculate past the shared boundary and
+    never rewind into (or mutate) a forked block."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab, size=8).astype(np.int32)  # 2 blocks
+    work = [(shared, 8),
+            (np.concatenate([shared, rng.integers(0, cfg.vocab, size=3)
+                             .astype(np.int32)]), 8),
+            (shared, 8)]
+    _, _, seng = _run_pair(cfg, params, work, prefix_cache=True,
+                           check_every_tick=True)
+    assert seng.metrics.prefix_hits > 0          # prefix path exercised
+    assert seng.metrics.spec_ticks > 0
+
+
+def test_speculative_under_pool_pressure_with_eviction():
+    """Speculative decode keeps drawing/rolling-back blocks correctly while
+    the pool is tight enough that prefix-cache entries must be evicted for
+    admission; the allocator invariant holds after every tick."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = _params(cfg)
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    # pool: 9 usable blocks of 4 tokens; each request needs up to 4 blocks,
+    # so two in-flight + cached prefix blocks saturate it and force eviction
+    eng = Engine(cfg, params=params, slots=2, max_seq=24, block_size=4,
+                 num_blocks=10, max_chunk=8, prefix_cache=True,
+                 speculative=SpecConfig(k=4))
+    eng.warmup()
+    reqs = [eng.submit(shared, max_new=8) for _ in range(4)]
+    reqs += [eng.submit(rng.integers(0, cfg.vocab, size=7).astype(np.int32),
+                        max_new=8) for _ in range(2)]
+    while eng.scheduler.has_work:
+        assert eng.tick()
+        eng.alloc.check()
+    assert sorted(eng.results) == [r.rid for r in reqs]
+    assert all(len(t) == 8 for t in eng.results.values())
+    assert eng.metrics.spec_ticks > 0
+    # identical streams for the identical prompts (speculation + eviction
+    # never corrupted a shared or rolled-back block)
+    first = eng.results[reqs[0].rid]
+    for r in reqs[1:4]:
+        np.testing.assert_array_equal(eng.results[r.rid], first)
+
+
+def test_speculative_exact_max_new_budget():
+    """High-acceptance ticks (corpus drafts) never overshoot max_new: the
+    verify step's per-slot limit clamps acceptance, so every request ends
+    with exactly its token budget."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    eng = Engine(cfg, params=params, slots=1, max_seq=64, block_size=4,
+                 max_chunk=8, speculative=SpecConfig(k=4))
+    eng.warmup()
+    # odd budgets force the final tick to clamp mid-draft once the corpus
+    # makes acceptance near-total
+    reqs = [eng.submit(prompt, max_new=g) for g in (11, 7, 5, 3)]
+    res = eng.run()
+    for r, g in zip(reqs, (11, 7, 5, 3)):
+        assert len(res[r.rid]) == g
+    eng.alloc.check()
+    assert eng.metrics.spec_accepted_tokens > 0
+
+
+# -- KV rewind edge cases (host side) -----------------------------------------
+
+
+def _pool(slots=2, blocks=10, bs=4, max_blocks=6):
+    alloc = kvc.BlockAllocator(num_blocks=blocks, block_size=bs)
+    tables = kvc.BlockTables(slots, max_blocks)
+    return alloc, tables
+
+
+def test_rewind_reject_all_and_accept_all():
+    """Reject-all: every draft block returns to the pool and the request's
+    reservation.  Accept-all: nothing to rewind (the engine's guard skips
+    the call; a same-length rewind is a no-op)."""
+    alloc, tables = _pool()
+    assert alloc.reserve(4)
+    tables.ensure(0, 9, alloc)                    # 3 blocks: tokens 0..8
+    alloc.check()
+    # reject-all: roll back to 5 tokens (2 blocks)
+    freed, pair = tables.rewind(0, 5, alloc)
+    assert (freed, pair) == (1, None)
+    assert len(tables.blocks[0]) == 2
+    assert alloc._reserved == 2                   # 4 - 3 drawn + 1 rewound
+    alloc.check()
+    # accept-all: rewind to the exact covered length is a no-op
+    freed, pair = tables.rewind(0, 8, alloc)
+    assert (freed, pair) == (0, None)
+    assert len(tables.blocks[0]) == 2
+    # rewinding to more tokens than the table covers is a caller bug
+    with pytest.raises(ValueError):
+        tables.rewind(0, 20, alloc)
+    tables.release(0, alloc, unreserve=alloc._reserved)
+    alloc.check()
+    assert alloc.in_use == 0
+
+
+def test_rewind_across_block_boundary():
+    """A rewind spanning several blocks frees exactly the uncovered ones and
+    the table rows read NULL beyond the new boundary."""
+    alloc, tables = _pool()
+    tables.ensure(0, 24, alloc)                   # 6 blocks
+    held = list(tables.blocks[0])
+    freed, pair = tables.rewind(0, 4, alloc, rereserve=False)  # 1 block left
+    assert freed == 5 and pair is None            # 4 % 4 == 0: aligned, no CoW
+    assert tables.blocks[0] == held[:1]
+    assert list(tables.table[0, 1:]) == [kvc.NULL_BLOCK] * 5
+    alloc.check()
+    assert alloc.in_use == 1
+    # freed blocks are immediately reusable
+    tables.ensure(1, 20, alloc)
+    alloc.check()
+    tables.release(0, alloc)
+    tables.release(1, alloc)
+    assert alloc.in_use == 0
+
+
+def test_rewind_cow_forked_block_copies_then_rewinds():
+    """Rewinding into the middle of a CoW-forked block must diverge it
+    (copy-then-rewind): the shared physical block is never mutated, the
+    rewound slot gets a private replacement, and the other owner's view is
+    untouched."""
+    alloc, tables = _pool()
+    tables.ensure(0, 12, alloc)                   # slot 0: 3 blocks
+    owned = list(tables.blocks[0])
+    tables.seed(1, kvc.fork_blocks(alloc, owned))  # slot 1 shares all 3
+    assert [alloc.refcount(b) for b in owned] == [2, 2, 2]
+    alloc.check()
+    # rewind slot 1 to 6 tokens: block 2 dropped (loses one ref), block 1
+    # becomes the *partial* tail -> shared -> must diverge
+    freed, pair = tables.rewind(1, 6, alloc, rereserve=False)
+    assert freed == 1
+    assert pair is not None
+    src, dst = pair
+    assert src == owned[1] and dst == tables.blocks[1][1] and dst != src
+    assert tables.blocks[0] == owned              # other owner untouched
+    assert alloc.refcount(owned[1]) == 1          # slot 0's ref only
+    assert alloc.refcount(dst) == 1               # private to slot 1
+    assert alloc.refcount(owned[2]) == 1          # dropped share
+    alloc.check()
+    # block-ALIGNED rewind of a shared tail needs no divergence: the next
+    # write starts a fresh block, so sharing is preserved
+    alloc2, tables2 = _pool()
+    tables2.ensure(0, 8, alloc2)
+    owned2 = list(tables2.blocks[0])
+    tables2.seed(1, kvc.fork_blocks(alloc2, owned2))
+    freed, pair = tables2.rewind(1, 4, alloc2, rereserve=False)
+    assert freed == 1 and pair is None
+    assert alloc2.refcount(owned2[0]) == 2        # still shared
+    alloc2.check()
+
+
+def test_free_rereserve_skips_shared_blocks():
+    """free(rereserve=True) re-reserves only blocks that actually reached
+    the free list — a shared block loses a ref without growing the free
+    list, and reserving against it would break the allocator invariant."""
+    alloc = kvc.BlockAllocator(num_blocks=6, block_size=4)
+    ids = alloc.alloc(2, reserved=False)
+    kvc.fork_blocks(alloc, ids[:1])               # ids[0] now refcount 2
+    returned = alloc.free(ids, rereserve=True)
+    assert returned == 1                          # only ids[1] hit the pool
+    assert alloc._reserved == 1
+    alloc.check()
+    alloc.free(ids[:1])                           # drop the remaining share
+    alloc._reserved = 0
+    alloc.check()
+
+
+# -- drafter / bucket units ---------------------------------------------------
+
+
+def test_spec_config_coercion():
+    assert coerce_spec(None) is None and coerce_spec(False) is None
+    assert coerce_spec(True) == SpecConfig()
+    assert coerce_spec(3).k == 3
+    sc = SpecConfig(k=2, ngram_min=1, ngram_max=2)
+    assert coerce_spec(sc) is sc
+    with pytest.raises(TypeError):
+        coerce_spec("yes")
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_min=3, ngram_max=2)
+
+
+def test_verify_buckets_cover_every_draft_length():
+    assert verify_buckets(1) == [2]
+    assert verify_buckets(4) == [2, 3, 5]
+    assert verify_buckets(8) == [2, 3, 5, 9]
+    for k in (1, 2, 3, 4, 6, 8):
+        for d in range(1, k + 1):
+            s = bucket_for(d, k)
+            assert s in verify_buckets(k) and s >= d + 1
+    with pytest.raises(ValueError):
+        bucket_for(5, 4)
+
+
+def test_ngram_drafter_own_history():
+    d = NgramDrafter(SpecConfig(k=3, ngram_min=2, ngram_max=3))
+    # history [5,6,7,9, 5,6,7] -> suffix [5,6,7] recurs; proposes [9,5,6]
+    ctx = np.array([5, 6, 7, 9, 5, 6, 7], np.int32)
+    np.testing.assert_array_equal(d.draft(ctx), [9, 5, 6])
+    # no recurrence -> empty (decode normally)
+    assert len(d.draft(np.array([1, 2, 3, 4], np.int32))) == 0
+    # determinism
+    np.testing.assert_array_equal(d.draft(ctx), d.draft(ctx))
+
+
+def test_ngram_drafter_corpus_and_recency():
+    d = NgramDrafter(SpecConfig(k=4, ngram_min=2, ngram_max=3, corpus_size=2))
+    d.remember(np.array([1, 2, 3, 40, 41, 42], np.int32))
+    # own history has no match; corpus continuation after [2,3] is proposed
+    np.testing.assert_array_equal(
+        d.draft(np.array([9, 1, 2, 3], np.int32)), [40, 41, 42])
+    # a more recent stream with the same n-gram wins
+    d.remember(np.array([1, 2, 3, 70, 71], np.int32))
+    np.testing.assert_array_equal(
+        d.draft(np.array([9, 1, 2, 3], np.int32)), [70, 71])
+    # bounded retention: a third stream evicts the oldest
+    d.remember(np.array([8, 8, 8], np.int32))
+    assert len(d._corpus) == 2
+    # own-history match outranks the corpus at equal n-gram length
+    own = np.array([2, 3, 50, 2, 3], np.int32)
+    np.testing.assert_array_equal(d.draft(own), [50, 2, 3])
