@@ -1,0 +1,133 @@
+"""Decode-attention benchmark: block-table walking vs the gather baseline.
+
+Paper artifact: Sec 3.3 (programmable strided memory access) applied to the
+serving decode path.  The legacy path materializes every slot's cache view
+with ``gather_kv`` — a (B, max_blocks * block_size, H, D) gather over the
+*table extent* — before a dense softmax; the paged paths (the Pallas kernel
+on TPU, the bounded ``while_loop`` fallback elsewhere) walk the block table
+and touch only the lived-in blocks.  The gap is therefore widest exactly
+where serving lives: long-context tables (large extent) at partial
+occupancy (short active lengths).
+
+This benchmark times the jitted decode-attention op itself (the per-tick
+hot path; model projections excluded) on one long-context shape with the
+active length far below the table extent:
+
+  decode_attn/step_us_gather     µs per decode-attention call, gather path
+                                 (derived: table-extent tokens it touches)
+  decode_attn/step_us_paged      µs per call, paged path (auto-resolved:
+                                 flash on TPU, blocked elsewhere; derived:
+                                 the max active tokens it touches)
+  decode_attn/speedup_paged      gather / paged ratio (derived = 1.0 — the
+                                 bar: walking the table must not lose)
+  decode_attn/decode_tok_s_paged tokens/s through the paged op at this
+                                 shape (derived: same through gather)
+  decode_attn/step_us_paged_int8 µs per call with the int8-resident pool
+                                 (in-kernel/in-loop dequant)
+  decode_attn/kv_pool_mib_int8   resident pool MiB, int8 (derived: float
+                                 pool MiB for the same extent)
+
+Expected runtime: ~20 s on CPU.  REPRO_BENCH_FAST=1 shrinks the extent —
+same code paths, smoke-sized problem.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.tuning import env_truthy
+
+FAST = env_truthy(os.environ.get("REPRO_BENCH_FAST"))
+
+SLOTS = 4
+HKV, GROUPS, D = 4, 2, 64
+BLOCK_SIZE = 16
+MAX_BLOCKS = 64 if FAST else 256          # table extent: 1k / 4k tokens
+ACTIVE = 96 if FAST else 384              # live tokens per slot (partial)
+ITERS = 5 if FAST else 20
+
+
+def _setup(kv_precision="float"):
+    import jax.numpy as jnp
+
+    from repro.serving import kv_cache as kvc
+
+    rng = np.random.default_rng(0)
+    num_blocks = 1 + SLOTS * MAX_BLOCKS
+    cache = kvc.init_paged_kv(num_blocks, BLOCK_SIZE, HKV, D, jnp.float32,
+                              kv_precision=kv_precision)
+    alloc = kvc.BlockAllocator(num_blocks, BLOCK_SIZE)
+    tables = kvc.BlockTables(SLOTS, MAX_BLOCKS)
+    for s in range(SLOTS):
+        tables.ensure(s, ACTIVE, alloc)
+    bt = tables.array()
+    k_new = jnp.asarray(rng.normal(size=(SLOTS, ACTIVE, HKV, D)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(SLOTS, ACTIVE, HKV, D)), jnp.float32)
+    cache = kvc.write_kv(cache, bt, k_new, v_new, 0)
+    q = jnp.asarray(rng.normal(size=(SLOTS, 1, HKV * GROUPS, D)), jnp.float32)
+    idx = jnp.full((SLOTS,), ACTIVE - 1, jnp.int32)
+    return q, cache, bt, idx
+
+
+def _time_backend(backend, setup, iters=ITERS):
+    """Best-of-N seconds per jitted decode-attention call."""
+    import jax
+
+    from repro.kernels import flash_decode as fd
+
+    q, cache, bt, idx = setup
+    fn = jax.jit(lambda q, c, t, i: fd.paged_decode_attention(
+        q, c, t, i, backend=backend))
+    fn(q, cache, bt, idx).block_until_ready()     # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(q, cache, bt, idx).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    import jax
+
+    from repro.kernels import flash_decode as fd
+    from repro.serving import kv_cache as kvc
+
+    setup_f = _setup("float")
+    setup_q = _setup("int8")
+    paged = fd._resolve_backend("auto")           # flash on TPU, else blocked
+    t_gather = _time_backend("gather", setup_f)
+    t_paged = _time_backend(paged, setup_f)
+    t_paged_q = _time_backend(paged, setup_q)
+    pool_f = kvc.pool_bytes(setup_f[1]) / 2**20
+    pool_q = kvc.pool_bytes(setup_q[1]) / 2**20
+    extent = MAX_BLOCKS * BLOCK_SIZE
+    us = 1e6
+    return [
+        {"name": "decode_attn/step_us_gather",
+         "value": round(t_gather * us, 1), "derived": f"{extent} tok extent"},
+        {"name": f"decode_attn/step_us_paged[{paged}]",
+         "value": round(t_paged * us, 1), "derived": f"{ACTIVE} tok active"},
+        {"name": "decode_attn/speedup_paged",
+         "value": round(t_gather / t_paged, 2), "derived": 1.0},
+        {"name": "decode_attn/decode_tok_s_paged",
+         "value": round(SLOTS / t_paged, 1),
+         "derived": round(SLOTS / t_gather, 1)},
+        {"name": "decode_attn/step_us_paged_int8",
+         "value": round(t_paged_q * us, 1), "derived": ""},
+        {"name": "decode_attn/kv_pool_mib_int8",
+         "value": round(pool_q, 2), "derived": round(pool_f, 2)},
+    ]
+
+
+def rows():
+    return run()
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for r in rows():
+        print(f"{r['name']},{r['value']},{r['derived']}")

@@ -3,7 +3,8 @@
 Prints ``name,value,derived`` CSV rows (the harness contract) — for
 reproduction benchmarks `value` is the reproduced metric and `derived`
 carries the paper's reference value.  Sections: fig5, table2, fig7, table3,
-kernel (incl. autotuner deltas), serving (incl. float-vs-w8a8), spec
+kernel (incl. autotuner deltas), decode_attn (paged decode attention vs the
+gather baseline, incl. int8 KV), serving (incl. float-vs-w8a8), spec
 (speculative decoding), cluster, plus roofline rows when dry-run results
 exist.  Expected runtime: ~2 min total on CPU; per-script details in each
 module's docstring and EXPERIMENTS.md.
@@ -40,7 +41,7 @@ def main(argv=None) -> None:
                          "(exports REPRO_BENCH_FAST=1)")
     ap.add_argument("--only", default=None,
                     help="run a single section (fig5|table2|fig7|table3|"
-                         "kernel|serving|spec|cluster)")
+                         "kernel|decode_attn|serving|spec|cluster)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable report (default "
                          "BENCH_smoke.json with --fast; see "
@@ -56,6 +57,7 @@ def main(argv=None) -> None:
         "BENCH_smoke.json" if args.fast and not args.only else None)
     from benchmarks import (
         cluster_bench,
+        decode_bench,
         fig5_ablation,
         fig7_gemmini,
         kernel_bench,
@@ -71,6 +73,7 @@ def main(argv=None) -> None:
         ("fig7", fig7_gemmini),
         ("table3", table3_efficiency),
         ("kernel", kernel_bench),
+        ("decode_attn", decode_bench),
         ("serving", serving_bench),
         ("spec", spec_bench),
         ("cluster", cluster_bench),

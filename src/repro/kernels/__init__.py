@@ -3,6 +3,8 @@
   gemm            output-stationary tiled GeMM (the paper's core, on MXU)
   gemm_pipelined  explicit depth-D ring-buffer variant (D_stream knob)
   quant           int8 row quantization + the fused "w8a8" deployment GeMM
+  flash_decode    paged decode attention: block-table walking + split-K +
+                  in-kernel int8-KV dequant (serving's hot per-token op)
   ops             jit'd public wrappers + backend dispatch (incl. the
                   precision-mode hook consumed from repro.quant)
   registry        named kernel factories (backend -> Pallas specialization)
@@ -12,6 +14,17 @@
 known (TM, TK, TN) for the problem, searched once and cached.
 """
 
+from repro.kernels.flash_decode import (
+    FlashDecodeSpec,
+    decode_backend,
+    flash_decode_attention,
+    get_decode_backend,
+    get_decode_spec,
+    paged_decode_attention,
+    ref_paged_decode,
+    set_decode_backend,
+    set_decode_spec,
+)
 from repro.kernels.ops import (
     gemm,
     gemm_int8_dequant,
@@ -47,4 +60,14 @@ __all__ = [
     "make_kernel",
     "register_kernel",
     "registered_kernels",
+    # paged flash-decode (kernels/flash_decode.py)
+    "FlashDecodeSpec",
+    "flash_decode_attention",
+    "paged_decode_attention",
+    "ref_paged_decode",
+    "decode_backend",
+    "set_decode_backend",
+    "get_decode_backend",
+    "set_decode_spec",
+    "get_decode_spec",
 ]

@@ -18,7 +18,7 @@ from __future__ import annotations
 import functools
 from typing import Callable, Dict, Tuple
 
-from repro.core.generator import TpuGemmSpec
+from repro.kernels.flash_decode import make_flash_decode
 from repro.kernels.gemm import make_dequant_gemm, make_gemm
 from repro.kernels.gemm_pipelined import make_pipelined_gemm
 from repro.kernels.quant import make_w8a8_gemm
@@ -50,11 +50,14 @@ def get_kernel_factory(name: str) -> KernelFactory:
 
 
 @functools.lru_cache(maxsize=256)
-def _make_cached(name: str, spec: TpuGemmSpec, interpret: bool) -> Callable:
+def _make_cached(name: str, spec, interpret: bool) -> Callable:
     return _REGISTRY[name](spec, interpret=interpret)
 
 
-def make_kernel(name: str, spec: TpuGemmSpec, *, interpret: bool = False) -> Callable:
+# `spec` is the design point of the named kernel family: a TpuGemmSpec for
+# the GeMM variants, a FlashDecodeSpec for "flash_decode" — any hashable
+# frozen dataclass works (the memoization keys on it).
+def make_kernel(name: str, spec, *, interpret: bool = False) -> Callable:
     """Instantiate (or fetch the memoized) kernel `name` at design point `spec`."""
     get_kernel_factory(name)  # raise the readable error before caching
     return _make_cached(name, spec, interpret)
@@ -68,3 +71,6 @@ register_kernel("dequant", make_dequant_gemm)
 # The int8 deployment path end to end: float activations row-quantized in
 # VMEM, int8 x int8 -> int32 GeMM, fused dequant epilogue (quant.py).
 register_kernel("w8a8", make_w8a8_gemm)
+# Paged decode attention (flash_decode.py): spec is a FlashDecodeSpec, not a
+# TpuGemmSpec — the registry only requires a hashable frozen design point.
+register_kernel("flash_decode", make_flash_decode)

@@ -135,6 +135,7 @@ def serve_cluster(cfg, args) -> None:
         block_size=args.block_size, num_blocks=args.kv_blocks or None,
         max_chunk=args.chunk, autotune=args.autotune,
         tune_mode=args.tune_mode, precision=args.precision,
+        kv_precision=args.kv_precision,
         prefix_cache=args.prefix_cache,
         speculative=args.draft_k if args.speculative else False)
     t0 = time.time()
@@ -181,6 +182,11 @@ def main(argv=None):
                     help="execution precision: w8a8 quantizes weights "
                          "int8-resident at warmup and serves through the "
                          "paper's int8 datapath (repro.quant)")
+    ap.add_argument("--kv-precision", default="float",
+                    choices=["float", "int8"],
+                    help="KV pool residency: int8 keeps the paged pool "
+                         "int8-resident (per-block scales, in-kernel "
+                         "dequant) — ~half the pool bytes per token")
     ap.add_argument("--compare-prefill", action="store_true",
                     help="time legacy token-by-token prefill vs the engine")
     ap.add_argument("--replicas", type=int, default=1,
@@ -217,6 +223,7 @@ def main(argv=None):
         max_chunk=args.chunk,
         autotune=args.autotune, tune_mode=args.tune_mode,
         precision=args.precision,
+        kv_precision=args.kv_precision,
         prefix_cache=args.prefix_cache,
         speculative=args.draft_k if args.speculative else False,
         verbose=True,

@@ -271,19 +271,26 @@ def attention(
 
         if isinstance(cache, paged.PagedKVCache):
             # Paged decode: scatter this step's k/v through the block table,
-            # then attend over the slot's gathered view of the pool.
+            # then attend over the pool directly (block-table walk) — the
+            # gather/blocked/flash backend choice lives in
+            # kernels/flash_decode.py and binds at trace time.
+            from repro.kernels import flash_decode as _fd
+
             assert block_tables is not None, "paged cache needs block_tables"
             new_cache = paged.write_kv(cache, block_tables, k, v, cache_index)
-            k_cache, v_cache = paged.gather_kv(new_cache, block_tables)
+            out = _fd.paged_decode_attention(
+                q, new_cache, block_tables, cache_index,
+                window=window, prefix_len=prefix_len,
+            )
         else:
             # Dense decode: append this step's k/v then attend over the cache.
             k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache_index, axis=1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache_index, axis=1)
             new_cache = KVCache(k_cache, v_cache)
-        out = decode_attention(
-            q, k_cache, v_cache, index=cache_index,
-            window=window, prefix_len=prefix_len,
-        )
+            out = decode_attention(
+                q, k_cache, v_cache, index=cache_index,
+                window=window, prefix_len=prefix_len,
+            )
     else:
         new_cache = None
         if cross and cache is not None:

@@ -186,16 +186,18 @@ def init_cache_for_kind(cfg, kind: str, batch: int, max_seq: int):
 
 
 def init_paged_cache_for_kind(
-    cfg, kind: str, batch: int, num_blocks: int, block_size: int
+    cfg, kind: str, batch: int, num_blocks: int, block_size: int,
+    kv_precision: str = "float",
 ):
     """Paged-serving decode state: attention kinds get a shared block pool
     (no per-slot KV allocation — the point of paging); SSM kinds keep their
-    O(1) per-slot state."""
+    O(1) per-slot state.  `kv_precision="int8"` makes the pool int8-resident
+    with per-(block, position, head) scales (see serving/kv_cache.py)."""
     from repro.serving import kv_cache as paged
 
     if kind in ("attn", "attn_local"):
         return paged.init_paged_kv(
             num_blocks, block_size, cfg.n_kv_heads, cfg.resolved_head_dim,
-            cfg.jax_dtype,
+            cfg.jax_dtype, kv_precision=kv_precision,
         )
     return init_cache_for_kind(cfg, kind, batch, 0)

@@ -303,7 +303,7 @@ class PagedDecodeState(NamedTuple):
 
 def init_paged_decode_state(
     cfg: ArchConfig, slots: int, *, num_blocks: int, block_size: int,
-    max_blocks_per_slot: int,
+    max_blocks_per_slot: int, kv_precision: str = "float",
 ) -> PagedDecodeState:
     if cfg.family in ("encdec", "vlm"):
         raise NotImplementedError(
@@ -312,7 +312,9 @@ def init_paged_decode_state(
 
     def make_group(_):
         return tuple(
-            blocks.init_paged_cache_for_kind(cfg, kind, slots, num_blocks, block_size)
+            blocks.init_paged_cache_for_kind(
+                cfg, kind, slots, num_blocks, block_size,
+                kv_precision=kv_precision)
             for kind in kinds
         )
 

@@ -27,6 +27,8 @@ from repro.serving.kv_cache import (
     fork_blocks,
     gather_kv,
     init_paged_kv,
+    pool_bytes,
+    quantize_kv_tokens,
     write_kv,
 )
 
@@ -43,6 +45,8 @@ __all__ = [
     "fork_blocks",
     "gather_kv",
     "init_paged_kv",
+    "pool_bytes",
+    "quantize_kv_tokens",
     "write_kv",
 ]
 

@@ -182,6 +182,11 @@ class EngineMetrics:
     spec_ticks: int = 0           # decode ticks that ran batched verification
     spec_draft_tokens: int = 0    # draft tokens proposed to the verifier
     spec_accepted_tokens: int = 0  # draft tokens verification accepted
+    kv_precision: str = "float"   # pool residency (serving/kv_cache.py)
+    kv_pool_bytes: int = 0        # resident KV pool bytes across all layers
+    kv_pool_blocks: int = 0       # pool blocks (incl. the null block)
+    kv_bytes_per_block: int = 0   # pool bytes per block across all layers
+    kv_slot_capacity: int = 0     # max-length requests the pool can hold
     requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
 
     @property
@@ -237,6 +242,14 @@ class EngineMetrics:
             f"peak_blocks={self.peak_blocks_in_use} "
             f"warmed={self.aot_steps} cold_compiles={self.cold_compiles}"
         )
+        if self.kv_pool_bytes:
+            out += (
+                f" kv_pool={self.kv_pool_bytes / 2**20:.1f}MiB "
+                f"({self.kv_pool_blocks} blk x "
+                f"{self.kv_bytes_per_block / 2**10:.1f}KiB, "
+                f"{self.kv_precision}) "
+                f"slots@max_seq={self.kv_slot_capacity}"
+            )
         if self.prefix_lookups:
             out += (
                 f" prefix_hits={self.prefix_hits}/{self.prefix_lookups} "
@@ -281,6 +294,7 @@ class Engine:
         autotune: bool = False,
         tune_mode: str = "analytic",
         precision: str = "float",
+        kv_precision: str = "float",
         calib_batches=None,
         max_queue: Optional[int] = None,
         prefix_cache=False,
@@ -297,6 +311,13 @@ class Engine:
                 raise ValueError(
                     f"unknown precision {precision!r}; known: {_qmodes.MODES}")
         self.precision = precision
+        if kv_precision not in ("float", "int8"):
+            raise ValueError(
+                f"unknown kv_precision {kv_precision!r}; known: float, int8")
+        # Orthogonal to `precision` (weight/activation GeMMs): int8 KV keeps
+        # the *pool* int8-resident with per-(block, position, head) scales;
+        # the decode kernel dequantizes in-VMEM (kernels/flash_decode.py).
+        self.kv_precision = kv_precision
         self._calib_batches = calib_batches
         self._seed = seed
         self.cfg = cfg
@@ -358,8 +379,10 @@ class Engine:
         self.state = M.init_paged_decode_state(
             cfg, slots, num_blocks=self.num_blocks, block_size=block_size,
             max_blocks_per_slot=self.max_blocks_per_slot,
+            kv_precision=kv_precision,
         )
         self.metrics = EngineMetrics()
+        self._account_kv_pools()
 
         # The decode state (KV pools included) is *donated* to every step:
         # XLA updates the pools in place instead of copying them per tick.
@@ -402,6 +425,24 @@ class Engine:
         self._verify_fn = other._verify_fn
         self._reset_fn = other._reset_fn
 
+    def _account_kv_pools(self) -> None:
+        """KV-pool residency accounting (metrics): total pool bytes across
+        every attention layer (scales included for int8 pools), per-block
+        cost, and how many max_seq-length requests the pool can hold at
+        once (the null block never serves data)."""
+        pools = [
+            leaf for leaf in jax.tree_util.tree_leaves(
+                self.state.caches,
+                is_leaf=lambda x: isinstance(x, kvc.PagedKVCache))
+            if isinstance(leaf, kvc.PagedKVCache)
+        ]
+        m = self.metrics
+        m.kv_precision = self.kv_precision
+        m.kv_pool_bytes = sum(kvc.pool_bytes(p) for p in pools)
+        m.kv_pool_blocks = self.num_blocks
+        m.kv_bytes_per_block = m.kv_pool_bytes // self.num_blocks
+        m.kv_slot_capacity = (self.num_blocks - 1) // self.max_blocks_per_slot
+
     # -- warmup: the configuration-pre-loading analogue ----------------------
 
     def warmup(self) -> None:
@@ -428,6 +469,19 @@ class Engine:
                 chunks=buckets, verbose=self.verbose,
                 dtype="int8" if w8a8 else None,
                 backend="w8a8" if w8a8 else "pallas")
+            # Decode-attention design point (tuning/decode.py), bound at
+            # trace time like the precision mode: every step traced below
+            # bakes in the tuned FlashDecodeSpec.  Shares the tuner cache
+            # autotune_for_serving just installed.
+            from repro import tuning
+            from repro.kernels import flash_decode as _fd
+
+            dspec = tuning.tune_decode_for_serving(
+                self.cfg, slots=self.slots, block_size=self.block_size,
+                max_blocks=self.max_blocks_per_slot, mode=self.tune_mode,
+                verbose=self.verbose)
+            if dspec is not None:
+                _fd.set_decode_spec(dspec)
         if self.precision != "float":
             self._quantize_weights()
         tokens = jnp.zeros((self.slots, 1), jnp.int32)
@@ -461,7 +515,8 @@ class Engine:
         self.state = M.init_paged_decode_state(
             self.cfg, self.slots, num_blocks=self.num_blocks,
             block_size=self.block_size,
-            max_blocks_per_slot=self.max_blocks_per_slot)
+            max_blocks_per_slot=self.max_blocks_per_slot,
+            kv_precision=self.kv_precision)
         self.metrics.aot_steps = len(self._warmed)
         if self.verbose:
             extra = (f" + verify {verify_buckets(self.spec.k)}"

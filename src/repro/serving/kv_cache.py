@@ -42,10 +42,21 @@ class PagedKVCache(NamedTuple):
     Mirrors ``attention.KVCache``'s (k, v) fields so the two cache kinds are
     interchangeable pytree leaves; ``isinstance`` distinguishes them where
     the addressing differs.
+
+    int8 residency (``Engine(kv_precision="int8")``): the pools hold int8
+    codes and ``k_scale``/``v_scale`` hold per-(block, position, kv-head)
+    f32 dequant scales — per *position* rather than per block because decode
+    appends one token at a time, and a shared per-block scale could not
+    absorb a new outlier token without requantizing the block's committed
+    bytes.  At D=64 the scale overhead is 4/256 of the f32 pool, so the
+    pool shrinks ~3.8x (~4x more blocks per byte).  Float pools leave the
+    scale fields None — both layouts are valid pytrees of one NamedTuple.
     """
 
     k: jax.Array  # (num_blocks, block_size, H_kv, D)
     v: jax.Array  # (num_blocks, block_size, H_kv, D)
+    k_scale: Optional[jax.Array] = None  # (num_blocks, block_size, H_kv) f32
+    v_scale: Optional[jax.Array] = None
 
     @property
     def num_blocks(self) -> int:
@@ -55,12 +66,37 @@ class PagedKVCache(NamedTuple):
     def block_size(self) -> int:
         return self.k.shape[-3]
 
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
 
 def init_paged_kv(
-    num_blocks: int, block_size: int, n_kv_heads: int, head_dim: int, dtype
+    num_blocks: int, block_size: int, n_kv_heads: int, head_dim: int, dtype,
+    *, kv_precision: str = "float",
 ) -> PagedKVCache:
     shape = (num_blocks, block_size, n_kv_heads, head_dim)
+    if kv_precision == "int8":
+        sshape = shape[:-1]
+        return PagedKVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.ones(sshape, jnp.float32),
+            v_scale=jnp.ones(sshape, jnp.float32))
+    if kv_precision != "float":
+        raise ValueError(
+            f"unknown kv_precision {kv_precision!r}; known: float, int8")
     return PagedKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def quantize_kv_tokens(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 per (token, kv-head): (B, S, H, D) float ->
+    ((B, S, H, D) int8 codes, (B, S, H) f32 scales).  Zero rows quantize to
+    zero codes at scale 1 (no special-casing on dequant)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
 
 
 def _flat_positions(block_tables: jax.Array, start, S: int, block_size: int
@@ -100,12 +136,22 @@ def write_kv(
     nb, bs, H, D = cache.k.shape
     B, S = k_new.shape[:2]
     flat = _flat_positions(block_tables, start, S, bs).reshape(-1)
+    k_scale, v_scale = cache.k_scale, cache.v_scale
+    if cache.quantized:
+        # Quantize on write (per token x kv-head); the pool never sees floats.
+        k_new, ks = quantize_kv_tokens(k_new)
+        v_new, vs = quantize_kv_tokens(v_new)
+        k_scale = k_scale.reshape(nb * bs, H).at[flat].set(
+            ks.reshape(-1, H), mode="drop").reshape(nb, bs, H)
+        v_scale = v_scale.reshape(nb * bs, H).at[flat].set(
+            vs.reshape(-1, H), mode="drop").reshape(nb, bs, H)
     k_pool = cache.k.reshape(nb * bs, H, D).at[flat].set(
         k_new.astype(cache.k.dtype).reshape(-1, H, D), mode="drop")
     v_pool = cache.v.reshape(nb * bs, H, D).at[flat].set(
         v_new.astype(cache.v.dtype).reshape(-1, H, D), mode="drop")
     return PagedKVCache(k=k_pool.reshape(nb, bs, H, D),
-                        v=v_pool.reshape(nb, bs, H, D))
+                        v=v_pool.reshape(nb, bs, H, D),
+                        k_scale=k_scale, v_scale=v_scale)
 
 
 def copy_blocks(
@@ -121,7 +167,11 @@ def copy_blocks(
     """
     k = cache.k.at[dst].set(cache.k[src])
     v = cache.v.at[dst].set(cache.v[src])
-    return PagedKVCache(k=k, v=v)
+    k_scale, v_scale = cache.k_scale, cache.v_scale
+    if cache.quantized:
+        k_scale = k_scale.at[dst].set(k_scale[src])
+        v_scale = v_scale.at[dst].set(v_scale[src])
+    return PagedKVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale)
 
 
 def gather_kv(
@@ -131,7 +181,10 @@ def gather_kv(
 
     A gather through the block table — the strided-access read pattern.
     Entries past a slot's true length read the null block; callers mask by
-    position, so that garbage is never attended.
+    position, so that garbage is never attended.  int8 pools are dequantized
+    here (f32 out) — this path materializes the view anyway, so there is no
+    byte saving to preserve; the flash-decode kernel dequantizes in-register
+    instead (kernels/flash_decode.py).
     """
     nb, bs, H, D = cache.k.shape
     B, max_blocks = block_tables.shape
@@ -139,7 +192,23 @@ def gather_kv(
             + jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(B, -1)
     k = jnp.take(cache.k.reshape(nb * bs, H, D), flat, axis=0)
     v = jnp.take(cache.v.reshape(nb * bs, H, D), flat, axis=0)
+    if cache.quantized:
+        ks = jnp.take(cache.k_scale.reshape(nb * bs, H), flat, axis=0)
+        vs = jnp.take(cache.v_scale.reshape(nb * bs, H), flat, axis=0)
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
     return k, v
+
+
+def pool_bytes(cache: PagedKVCache) -> int:
+    """Resident bytes of this pool (codes + scales) — the capacity metric
+    ``EngineMetrics.summary()`` reports per engine."""
+    total = cache.k.size * cache.k.dtype.itemsize \
+        + cache.v.size * cache.v.dtype.itemsize
+    if cache.quantized:
+        total += cache.k_scale.size * cache.k_scale.dtype.itemsize
+        total += cache.v_scale.size * cache.v_scale.dtype.itemsize
+    return total
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,8 @@
   model       - analytic ranking via the core/simulator.py cycle model
   cache       - JSON winner registry with an in-memory LRU front
   autotuner   - search + cache orchestration, `tuned_gemm` entry point
+  decode      - FlashDecodeSpec search for paged decode attention (same
+                cache registry, `fd...|flash_decode` keys)
 
 Quick use::
 
@@ -32,9 +34,25 @@ from repro.tuning.autotuner import (
 )
 from repro.tuning.cache import CacheEntry, TuneCache, cache_key, default_cache_path
 from repro.tuning.candidates import dtype_bits, enumerate_tiles
+from repro.tuning.decode import (
+    DecodeShape,
+    decode_cache_key,
+    enumerate_decode_specs,
+    predict_decode_cost,
+    serving_decode_shape,
+    tune_decode,
+    tune_decode_for_serving,
+)
 from repro.tuning.model import TilePrediction, predict, predict_clocks, proxy_config
 
 __all__ = [
+    "DecodeShape",
+    "decode_cache_key",
+    "enumerate_decode_specs",
+    "predict_decode_cost",
+    "serving_decode_shape",
+    "tune_decode",
+    "tune_decode_for_serving",
     "Autotuner",
     "TuneResult",
     "TuneCache",

@@ -44,26 +44,47 @@ def cache_key(shape: GemmShape, dtype, backend: str) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class CacheEntry:
-    """One tuned winner: the spec plus provenance for auditability."""
+    """One tuned winner: the spec plus provenance for auditability.
 
-    spec: TpuGemmSpec
+    `spec` is whatever design point the kernel family tunes — a `TpuGemmSpec`
+    for the GeMM backends, a `FlashDecodeSpec` for decode attention.  Records
+    other than GeMM carry a "kind" discriminator in their JSON form (GeMM
+    entries stay bare for backward compatibility with existing registries).
+    """
+
+    spec: object
     score: float              # predicted clocks (analytic) or seconds (wallclock)
     source: str               # "analytic" | "wallclock"
 
     def to_json(self) -> dict:
-        return {
-            "tm": self.spec.tm, "tk": self.spec.tk, "tn": self.spec.tn,
-            "depth": self.spec.depth, "int8": self.spec.int8,
-            "score": self.score, "source": self.source,
-        }
+        if isinstance(self.spec, TpuGemmSpec):
+            d = {
+                "tm": self.spec.tm, "tk": self.spec.tk, "tn": self.spec.tn,
+                "depth": self.spec.depth, "int8": self.spec.int8,
+            }
+        else:
+            d = dict(self.spec.to_json())  # must include its "kind"
+        d["score"] = self.score
+        d["source"] = self.source
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "CacheEntry":
-        return cls(
-            spec=TpuGemmSpec(
+        kind = d.get("kind")
+        if kind == "flash_decode":
+            # Lazy: keep tuning importable without the kernels package.
+            from repro.kernels.flash_decode import FlashDecodeSpec
+
+            spec = FlashDecodeSpec.from_json(d)
+        elif kind is None:
+            spec = TpuGemmSpec(
                 tm=int(d["tm"]), tk=int(d["tk"]), tn=int(d["tn"]),
                 depth=int(d.get("depth", 2)), int8=bool(d.get("int8", True)),
-            ),
+            )
+        else:
+            raise ValueError(f"unknown cache entry kind {kind!r}")
+        return cls(
+            spec=spec,
             score=float(d["score"]),
             source=str(d.get("source", "analytic")),
         )
