@@ -5,8 +5,8 @@ reproduction benchmarks `value` is the reproduced metric and `derived`
 carries the paper's reference value.  Sections: fig5, table2, fig7, table3,
 kernel (incl. autotuner deltas), decode_attn (paged decode attention vs the
 gather baseline, incl. int8 KV), serving (incl. float-vs-w8a8), spec
-(speculative decoding), cluster, plus roofline rows when dry-run results
-exist.  Expected runtime: ~2 min total on CPU; per-script details in each
+(speculative decoding), cluster, obs (tracing overhead; also writes
+BENCH_trace.json), plus roofline rows when dry-run results exist.  Expected runtime: ~2 min total on CPU; per-script details in each
 module's docstring and EXPERIMENTS.md.
 
 ``--fast`` (= `make bench-smoke`, wired into CI) sets REPRO_BENCH_FAST=1
@@ -41,7 +41,7 @@ def main(argv=None) -> None:
                          "(exports REPRO_BENCH_FAST=1)")
     ap.add_argument("--only", default=None,
                     help="run a single section (fig5|table2|fig7|table3|"
-                         "kernel|decode_attn|serving|spec|cluster)")
+                         "kernel|decode_attn|serving|spec|cluster|obs)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable report (default "
                          "BENCH_smoke.json with --fast; see "
@@ -61,6 +61,7 @@ def main(argv=None) -> None:
         fig5_ablation,
         fig7_gemmini,
         kernel_bench,
+        obs_bench,
         serving_bench,
         spec_bench,
         table2_dnn,
@@ -77,6 +78,7 @@ def main(argv=None) -> None:
         ("serving", serving_bench),
         ("spec", spec_bench),
         ("cluster", cluster_bench),
+        ("obs", obs_bench),
     ]
     if args.only:
         modules = [(n, m) for n, m in modules if n == args.only]

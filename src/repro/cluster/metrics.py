@@ -6,6 +6,15 @@ per-replica occupancy (is the load balancer actually balancing?), prefix
 cache effectiveness, and the shed rate the backpressure policy produced.
 Percentiles reuse ``serving.engine.percentile`` so per-engine and
 cluster-wide tails are computed with one definition.
+
+Aggregation is histogram-native (repro.obs.hist): each engine's streaming
+TTFT/rate sketches merge in O(replicas x buckets), so cluster tails stay
+cheap and exact-enough (within Histogram.rel_error) even when engines run
+with a capped request log.  While every engine's raw log is complete, the
+engine-TTFT percentiles are computed exactly from the concatenated lists —
+merged-histogram and raw-list answers agree to within the bucket width
+(tests/test_cluster.py pins this).  Per-phase utilization/MFU meters fold
+the same way (repro.obs.mfu.MfuMeter.merged).
 """
 
 from __future__ import annotations
@@ -13,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
+from repro.obs import Histogram, MfuMeter
 from repro.serving.engine import percentile
 
 
@@ -35,6 +45,13 @@ class ClusterMetrics:
     prefix_lookups: int = 0
     prefix_hits: int = 0
     prefix_hit_tokens: int = 0
+    # Merged streaming sketches across all engines (engine-side TTFT — the
+    # handles-based ttft_* fields above additionally include router wait)
+    # and the pool-wide per-phase utilization meter.  None until aggregate()
+    # fills them.
+    ttft_hist: Optional[Histogram] = None
+    tok_s_hist: Optional[Histogram] = None
+    mfu: Optional[MfuMeter] = None
 
     @property
     def shed_rate(self) -> float:
@@ -68,7 +85,40 @@ class ClusterMetrics:
         if self.prefix_lookups:
             out += (f" prefix_hit_rate={self.prefix_hit_rate:.0%} "
                     f"({self.prefix_hit_tokens} tok reused)")
+        if self.mfu is not None:
+            frag = self.mfu.summary()
+            if frag:
+                out += " " + frag
         return out
+
+    def as_dict(self) -> dict:
+        """JSON-serializable snapshot (launch/serve.py --metrics-json)."""
+        return {
+            "replicas": self.replicas,
+            "requests": self.requests,
+            "offered": self.offered,
+            "shed": self.shed,
+            "shed_rate": self.shed_rate,
+            "elapsed_s": self.elapsed_s,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "throughput_tok_s": self.throughput_tok_s,
+            "ttft_mean_s": self.ttft_mean_s,
+            "ttft_p50_s": self.ttft_p50_s,
+            "ttft_p95_s": self.ttft_p95_s,
+            "req_tok_s_p50": self.req_tok_s_p50,
+            "req_tok_s_p95": self.req_tok_s_p95,
+            "per_replica_requests": list(self.per_replica_requests),
+            "per_replica_occupancy": list(self.per_replica_occupancy),
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "ttft_hist": (self.ttft_hist.to_dict()
+                          if self.ttft_hist is not None else None),
+            "tok_s_hist": (self.tok_s_hist.to_dict()
+                           if self.tok_s_hist is not None else None),
+            "mfu": self.mfu.as_dict() if self.mfu is not None else None,
+        }
 
 
 def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
@@ -78,32 +128,53 @@ def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
     (e.g. driving engines directly), engine-side TTFT is used."""
     engines = pool.engines
     m = ClusterMetrics(replicas=len(engines), elapsed_s=elapsed_s)
-    per_req = []
+    per_req, dropped = [], 0
+    m.ttft_hist, m.tok_s_hist = Histogram(), Histogram()
     for e in engines:
         m.decode_tokens += e.metrics.decode_tokens
         m.prefill_tokens += e.metrics.prefill_tokens
         m.prefix_lookups += e.metrics.prefix_lookups
         m.prefix_hits += e.metrics.prefix_hits
         m.prefix_hit_tokens += e.metrics.prefix_hit_tokens
-        m.per_replica_requests.append(len(e.metrics.requests))
+        m.per_replica_requests.append(e.metrics.finished_requests)
         m.per_replica_occupancy.append(e.metrics.mean_occupancy)
         per_req.extend(e.metrics.requests)
+        dropped += e.metrics.requests_dropped
+        m.ttft_hist.merge(e.metrics.ttft_hist)
+        m.tok_s_hist.merge(e.metrics.tok_s_hist)
+    m.mfu = MfuMeter.merged([e.metrics.mfu for e in engines])
+    m.requests = len(per_req) + dropped
     # Every request's first token leaves a prefill chunk, so fold those
     # tokens into the generated total alongside decode-step tokens.
-    m.decode_tokens += len(per_req)
-    m.requests = len(per_req)
+    m.decode_tokens += m.requests
     if handles is None and router is not None:
         handles = [h for h in router.handles if h.done.is_set()]
     if handles:
+        # Handle timestamps include router/inbox wait — finer than the
+        # engine-side sketches, so prefer them when available.
         ttfts = [h.ttft_s for h in handles if h.ttft_s is not None]
-    else:
+        m.ttft_mean_s = sum(ttfts) / len(ttfts) if ttfts else 0.0
+        m.ttft_p50_s = percentile(ttfts, 50)
+        m.ttft_p95_s = percentile(ttfts, 95)
+    elif not dropped:
+        # Complete raw logs: exact concatenated-list percentiles.
         ttfts = [r.ttft_s for r in per_req]
-    rates = [r.decode_tok_s for r in per_req]
-    m.ttft_mean_s = sum(ttfts) / len(ttfts) if ttfts else 0.0
-    m.ttft_p50_s = percentile(ttfts, 50)
-    m.ttft_p95_s = percentile(ttfts, 95)
-    m.req_tok_s_p50 = percentile(rates, 50)
-    m.req_tok_s_p95 = percentile(rates, 95)
+        m.ttft_mean_s = sum(ttfts) / len(ttfts) if ttfts else 0.0
+        m.ttft_p50_s = percentile(ttfts, 50)
+        m.ttft_p95_s = percentile(ttfts, 95)
+    else:
+        # Capped logs dropped entries: the merged histograms are the source
+        # of truth (same nearest-rank semantics, bounded state).
+        m.ttft_mean_s = m.ttft_hist.mean
+        m.ttft_p50_s = m.ttft_hist.percentile(50)
+        m.ttft_p95_s = m.ttft_hist.percentile(95)
+    if per_req and not dropped:
+        rates = [r.decode_tok_s for r in per_req]
+        m.req_tok_s_p50 = percentile(rates, 50)
+        m.req_tok_s_p95 = percentile(rates, 95)
+    else:
+        m.req_tok_s_p50 = m.tok_s_hist.percentile(50)
+        m.req_tok_s_p95 = m.tok_s_hist.percentile(95)
     # A request can be shed at the router (in-flight bound) or by an
     # engine-side admission-queue bound after routing; both are refusals.
     engine_shed = sum(1 for h in (handles or []) if h.shed)

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.obs import Tracer, write_chrome_trace
 from repro.serving.engine import Engine
 
 
@@ -167,11 +168,15 @@ class Replica:
     def _resolve(self) -> None:
         if not self._pending:
             return
-        reqs = self.engine.metrics.requests
+        em = self.engine.metrics
+        reqs = em.requests
+        # _metrics_seen counts *finished* requests ever observed; with a
+        # capped request log (Engine(request_log=N)) the raw list's head is
+        # trimmed, so the unseen suffix starts at seen - dropped.
         by_rid = {}
-        for m in reqs[self._metrics_seen:]:
+        for m in reqs[self._metrics_seen - em.requests_dropped:]:
             by_rid[m.rid] = m
-        self._metrics_seen = len(reqs)
+        self._metrics_seen = em.finished_requests
         for rid, m in by_rid.items():
             h = self._pending.pop(rid, None)
             if h is None:
@@ -238,10 +243,17 @@ class ReplicaPool:
     """N replicas over one config: build, warm, start, submit, drain."""
 
     def __init__(self, cfg, n: int, *, devices="auto", seed: int = 0,
-                 **engine_kwargs):
+                 trace: bool = False, **engine_kwargs):
         if n < 1:
             raise ValueError(f"need at least one replica, got {n}")
         self.cfg = cfg
+        # Pool-level tracing: one Tracer per replica (pid=i), each confined
+        # to its replica thread — no cross-thread writes, and the export
+        # shows one process row per replica on a shared clock.
+        self.tracers: List[Tracer] = []
+        if trace:
+            self.tracers = [Tracer(name=f"replica{i}[{cfg.name}]", pid=i)
+                            for i in range(n)]
         if devices == "auto":
             avail = jax.devices()
             devices = ([avail[i % len(avail)] for i in range(n)]
@@ -257,10 +269,13 @@ class ReplicaPool:
             params = M.init_model(jax.random.PRNGKey(seed), cfg)
         self.replicas: List[Replica] = []
         for i in range(n):
+            kw = dict(engine_kwargs)
+            if self.tracers:
+                kw["trace"] = self.tracers[i]
             self.replicas.append(Replica(
                 i, cfg, device=devices[i], params=params,
                 share_steps_from=self.replicas[0].engine if i else None,
-                seed=seed, **engine_kwargs))
+                seed=seed, **kw))
 
     def __len__(self) -> int:
         return len(self.replicas)
@@ -287,6 +302,16 @@ class ReplicaPool:
     def stop(self) -> None:
         for r in self.replicas:
             r.stop()
+
+    def export_trace(self, path: str, *, metadata: Optional[dict] = None
+                     ) -> dict:
+        """Write the pool's Chrome-trace JSON (requires trace=True); one
+        process lane per replica.  Call after stop() / run_sync() — the
+        rings are single-writer and read here from the caller's thread."""
+        if not self.tracers:
+            raise RuntimeError(
+                "pool was built without tracing; pass ReplicaPool(trace=True)")
+        return write_chrome_trace(path, self.tracers, metadata=metadata)
 
     def submit_to(self, idx: int, handle: ClusterRequest) -> None:
         self.replicas[idx].submit(handle)

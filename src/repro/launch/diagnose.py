@@ -1,9 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-
 """Collective/memory attribution: which model ops generate the traffic.
 
 Groups collective bytes (x loop trip counts) by the jax op_name metadata so
@@ -13,10 +7,23 @@ the hillclimb can target the dominant source.
 """
 
 import argparse
+import os
 import re
 from collections import defaultdict
 
 from repro.launch import hlo_cost
+
+
+def _force_host_devices(n: int = 512) -> None:
+    """Expose `n` fake host devices so dryrun can build many-device meshes
+    on CPU.  Must run before jax initializes its backend — main() calls
+    this ahead of the dryrun import.  Kept out of module scope on purpose:
+    importing this module (e.g. from tests or other launchers) must not
+    mutate the process environment."""
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 
 def attribute(text: str, top: int = 15):
@@ -84,6 +91,7 @@ def main():
     if args.hlo and os.path.exists(args.hlo):
         text = open(args.hlo).read()
     else:
+        _force_host_devices()
         import repro.launch.dryrun as dr
 
         dump = args.hlo or f"/tmp/hlo_{args.arch}_{args.shape}_{args.mesh}.txt"

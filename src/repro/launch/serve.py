@@ -21,6 +21,7 @@ decode/prefill steps (see repro.quant and EXPERIMENTS.md §Quantization).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import List
 
@@ -137,7 +138,8 @@ def serve_cluster(cfg, args) -> None:
         tune_mode=args.tune_mode, precision=args.precision,
         kv_precision=args.kv_precision,
         prefix_cache=args.prefix_cache,
-        speculative=args.draft_k if args.speculative else False)
+        speculative=args.draft_k if args.speculative else False,
+        trace=bool(args.trace_out))
     t0 = time.time()
     pool.warmup(verbose=True)
     print(f"warmup: {args.replicas} replicas in {time.time() - t0:.1f}s "
@@ -157,6 +159,19 @@ def serve_cluster(cfg, args) -> None:
     for i, e in enumerate(pool.engines):
         print(f"  replica[{i}]: {e.metrics.summary()}")
     router.close()
+    pool.stop()     # replica threads must be parked before reading the rings
+    if args.trace_out:
+        doc = pool.export_trace(
+            args.trace_out, metadata={"arch": cfg.name,
+                                      "replicas": args.replicas})
+        print(f"trace: {len(doc['traceEvents'])} events -> {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump({"cluster": m.as_dict(),
+                       "replicas": [e.metrics.as_dict()
+                                    for e in pool.engines]}, f, indent=2)
+        print(f"metrics: {args.metrics_json}")
 
 
 def main(argv=None):
@@ -209,6 +224,13 @@ def main(argv=None):
     ap.add_argument("--max-pending", type=int, default=0,
                     help="cluster backpressure: in-flight request bound "
                          "(0 = unbounded; overflow is shed)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(per-request lifecycle spans + per-tick phases; "
+                         "see README §Observability)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics snapshot (scalar gauges, "
+                         "percentile histograms, per-phase MFU) as JSON")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch)
@@ -226,6 +248,7 @@ def main(argv=None):
         kv_precision=args.kv_precision,
         prefix_cache=args.prefix_cache,
         speculative=args.draft_k if args.speculative else False,
+        trace=bool(args.trace_out),
         verbose=True,
     )
     t0 = time.time()
@@ -253,6 +276,18 @@ def main(argv=None):
           f"= {pool_tokens} tokens shared "
           f"(dense would pin {dense_tokens} = slots x max_seq per layer)")
     print("sample continuations:", gen[:2, :8].tolist())
+
+    if args.trace_out:
+        from repro.obs import write_chrome_trace
+
+        doc = write_chrome_trace(args.trace_out, [eng.tracer],
+                                 metadata={"arch": cfg.name})
+        print(f"trace: {len(doc['traceEvents'])} events -> {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(eng.metrics.as_dict(), f, indent=2)
+        print(f"metrics: {args.metrics_json}")
 
     if args.compare_prefill:
         t_legacy, t_chunked = compare_prefill(

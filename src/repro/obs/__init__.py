@@ -1,0 +1,41 @@
+"""repro.obs — live utilization tracing and streaming metrics.
+
+Three pieces, one layer (see each module's docstring):
+
+  * trace.py  — pre-allocated ring-buffer span/event log (per-request
+                lifecycle + per-tick phases), single-writer per engine
+                thread, Chrome-trace exportable;
+  * hist.py   — log-bucketed streaming histograms with nearest-rank
+                percentiles and merge (bounded replacement for raw request
+                lists in engine/cluster metrics);
+  * mfu.py    — per-phase utilization (measured vs the cycle-model/roofline
+                analytic bound) and MFU gauges, the paper's Table 2
+                utilization computed live at serving time;
+  * export.py — Perfetto/chrome://tracing JSON export.
+
+Threaded through serving/engine.py (``Engine(trace=True)``),
+cluster/replica.py (``ReplicaPool(trace=True)``), and launch/serve.py
+(``--trace-out`` / ``--metrics-json``).
+"""
+
+from repro.obs.hist import Histogram
+from repro.obs.mfu import MfuMeter, PHASES, PhaseStat
+from repro.obs.trace import NULL_TRACER, NullTracer, Tracer
+from repro.obs.export import (
+    chrome_trace_events,
+    trace_document,
+    write_chrome_trace,
+)
+
+__all__ = [
+    "Histogram",
+    "MfuMeter",
+    "PHASES",
+    "PhaseStat",
+    "NULL_TRACER",
+    "NullTracer",
+    "Tracer",
+    "chrome_trace_events",
+    "trace_document",
+    "write_chrome_trace",
+]

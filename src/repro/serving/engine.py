@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.dataflow import GemmShape
 from repro.models import model as M
+from repro.obs import Histogram, MfuMeter, NULL_TRACER, Tracer
 from repro.serving import kv_cache as kvc
 from repro.serving.prefill import chunk_buckets
 from repro.serving.scheduler import Phase, Request, Scheduler
@@ -187,7 +188,38 @@ class EngineMetrics:
     kv_pool_blocks: int = 0       # pool blocks (incl. the null block)
     kv_bytes_per_block: int = 0   # pool bytes per block across all layers
     kv_slot_capacity: int = 0     # max-length requests the pool can hold
+    prefill_time_s: float = 0.0   # wall clock spent in prefill-chunk steps
     requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
+    # Streaming percentile sketches (repro.obs.hist): fed on every finish,
+    # bounded regardless of how long the engine lives.  The raw `requests`
+    # list stays for exact/offline analysis but may be capped
+    # (Engine(request_log=N)); once entries are dropped, the histograms
+    # become the percentile source of truth.
+    requests_dropped: int = 0
+    ttft_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    latency_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    tok_s_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    # Live utilization gauges (repro.obs.mfu), owned/installed by the engine.
+    mfu: Optional[MfuMeter] = None
+
+    def note_request(self, rm: RequestMetrics,
+                     log_limit: Optional[int] = None) -> None:
+        """Record one finished request: feed the streaming histograms and
+        append to the raw log, trimming it to `log_limit` entries (oldest
+        first) when set."""
+        self.ttft_hist.add(rm.ttft_s)
+        self.latency_hist.add(rm.latency_s)
+        self.tok_s_hist.add(rm.decode_tok_s)
+        self.requests.append(rm)
+        if log_limit is not None and len(self.requests) > log_limit:
+            drop = len(self.requests) - log_limit
+            del self.requests[:drop]
+            self.requests_dropped += drop
+
+    @property
+    def finished_requests(self) -> int:
+        """Total requests finished (raw log length + trimmed entries)."""
+        return len(self.requests) + self.requests_dropped
 
     @property
     def mean_occupancy(self) -> float:
@@ -201,10 +233,22 @@ class EngineMetrics:
         return self.decode_tokens / self.decode_time_s if self.decode_time_s else 0.0
 
     def ttft_percentile(self, q: float) -> float:
-        return percentile([r.ttft_s for r in self.requests], q)
+        """Nearest-rank TTFT percentile: exact over the raw log while it is
+        complete, histogram-backed (within Histogram.rel_error) once the
+        capped log has dropped entries."""
+        if self.requests and not self.requests_dropped:
+            return percentile([r.ttft_s for r in self.requests], q)
+        return self.ttft_hist.percentile(q)
+
+    def latency_percentile(self, q: float) -> float:
+        if self.requests and not self.requests_dropped:
+            return percentile([r.latency_s for r in self.requests], q)
+        return self.latency_hist.percentile(q)
 
     def decode_tok_s_percentile(self, q: float) -> float:
-        return percentile([r.decode_tok_s for r in self.requests], q)
+        if self.requests and not self.requests_dropped:
+            return percentile([r.decode_tok_s for r in self.requests], q)
+        return self.tok_s_hist.percentile(q)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -224,9 +268,12 @@ class EngineMetrics:
         return self.decode_tokens / max(1, self.decode_steps)
 
     def summary(self) -> str:
-        n = len(self.requests)
-        ttft = np.mean([r.ttft_s for r in self.requests]) if n else 0.0
-        lat = np.mean([r.latency_s for r in self.requests]) if n else 0.0
+        n = self.finished_requests
+        if self.requests and not self.requests_dropped:
+            ttft = np.mean([r.ttft_s for r in self.requests])
+            lat = np.mean([r.latency_s for r in self.requests])
+        else:
+            ttft, lat = self.ttft_hist.mean, self.latency_hist.mean
         out = (
             f"requests={n} prefill_chunks={self.prefill_chunks} "
             f"prefill_tokens={self.prefill_tokens} "
@@ -271,7 +318,48 @@ class EngineMetrics:
             )
             if self.calib_sites:
                 out += f" calib_sites={self.calib_sites}"
+        if self.mfu is not None:
+            frag = self.mfu.summary()
+            if frag:
+                out += " " + frag
         return out
+
+    def as_dict(self) -> dict:
+        """JSON-serializable snapshot (launch/serve.py --metrics-json):
+        scalar gauges, percentile sketches, and the per-phase utilization
+        figures."""
+        return {
+            "requests": self.finished_requests,
+            "requests_dropped_from_log": self.requests_dropped,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_time_s": self.prefill_time_s,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "decode_time_s": self.decode_time_s,
+            "throughput_tok_s": self.throughput_tok_s,
+            "ttft_p50_s": self.ttft_percentile(50),
+            "ttft_p95_s": self.ttft_percentile(95),
+            "latency_p50_s": self.latency_percentile(50),
+            "latency_p95_s": self.latency_percentile(95),
+            "req_tok_s_p50": self.decode_tok_s_percentile(50),
+            "req_tok_s_p95": self.decode_tok_s_percentile(95),
+            "mean_occupancy": self.mean_occupancy,
+            "peak_blocks_in_use": self.peak_blocks_in_use,
+            "precision": self.precision,
+            "kv_precision": self.kv_precision,
+            "kv_pool_bytes": self.kv_pool_bytes,
+            "prefix_hits": self.prefix_hits,
+            "prefix_lookups": self.prefix_lookups,
+            "spec_ticks": self.spec_ticks,
+            "acceptance_rate": self.acceptance_rate,
+            "aot_steps": self.aot_steps,
+            "cold_compiles": self.cold_compiles,
+            "ttft_hist": self.ttft_hist.to_dict(),
+            "latency_hist": self.latency_hist.to_dict(),
+            "tok_s_hist": self.tok_s_hist.to_dict(),
+            "mfu": self.mfu.as_dict() if self.mfu is not None else None,
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +387,8 @@ class Engine:
         max_queue: Optional[int] = None,
         prefix_cache=False,
         speculative=False,
+        trace=False,
+        request_log: Optional[int] = None,
         seed: int = 0,
         verbose: bool = False,
     ):
@@ -382,6 +472,39 @@ class Engine:
             kv_precision=kv_precision,
         )
         self.metrics = EngineMetrics()
+        # Live utilization gauges (repro.obs.mfu): a few float adds per tick,
+        # so they stay on unconditionally — summary() always carries a
+        # per-phase utilization/MFU figure.
+        self.mfu = MfuMeter(cfg)
+        self.metrics.mfu = self.mfu
+        # Raw request-log cap: None keeps every RequestMetrics (exact
+        # percentiles, benchmark-friendly); an int bounds the log for
+        # long-lived serving and flips percentiles onto the histograms.
+        self._request_log = request_log
+        # Span/event tracing (repro.obs.trace): off by default — NULL_TRACER
+        # makes every record call a no-op method dispatch.  Pass True for a
+        # fresh ring, or a Tracer to aggregate several engines into one
+        # export (cluster/replica.py names one per replica).
+        if isinstance(trace, Tracer):
+            self.tracer = trace
+        elif trace:
+            self.tracer = Tracer(name=f"engine[{cfg.name}]")
+        else:
+            self.tracer = NULL_TRACER
+        tc = self.tracer.intern
+        self._ev_tick = tc("tick")
+        self._ev_sched = tc("sched")
+        self._ev_prefill = tc("prefill")
+        self._ev_decode = tc("decode")
+        self._ev_verify = tc("verify")
+        self._ev_draft = tc("draft")
+        self._ev_reset = tc("reset")
+        self._ev_kv_in_use = tc("kv_blocks_in_use")
+        self._ev_kv_reserved = tc("kv_blocks_reserved")
+        self._ev_queue = tc("queue_depth")
+        self._ev_req_queued = tc("queued")
+        self._ev_req_prefill = tc("req_prefill")
+        self._ev_req_decode = tc("req_decode")
         self._account_kv_pools()
 
         # The decode state (KV pools included) is *donated* to every step:
@@ -462,6 +585,8 @@ class Engine:
         inside the precision context — so the compiled executables are int8
         end to end and serving never quantizes a weight again."""
         buckets = chunk_buckets(self.max_chunk)
+        warm_code = self.tracer.intern("warmup")
+        self.tracer.begin(warm_code)
         if self.autotune:
             w8a8 = self.precision != "float"
             autotune_for_serving(
@@ -518,6 +643,7 @@ class Engine:
             max_blocks_per_slot=self.max_blocks_per_slot,
             kv_precision=self.kv_precision)
         self.metrics.aot_steps = len(self._warmed)
+        self.tracer.end(warm_code)
         if self.verbose:
             extra = (f" + verify {verify_buckets(self.spec.k)}"
                      if self.spec is not None else "")
@@ -598,6 +724,8 @@ class Engine:
                                     step=self._step)
         if req is not None:
             self._submit_t[req.rid] = time.monotonic()
+            self.tracer.async_begin(self._ev_req_queued, req.rid)
+            self.tracer.counter(self._ev_queue, len(self.scheduler.queue))
         return req
 
     def _can_admit(self, req: Request) -> bool:
@@ -628,6 +756,10 @@ class Engine:
     def _admit(self) -> None:
         to_reset, seeds = [], []
         for slot, req in self.scheduler.admit(self._can_admit):
+            # Request lifecycle track: the queued span ends here, the prefill
+            # span opens (closed on the prompt-complete prefill chunk).
+            self.tracer.async_end(self._ev_req_queued, req.rid)
+            self.tracer.async_begin(self._ev_req_prefill, req.rid)
             blocks, ptoks, n_fresh = self._prefix_match.pop(
                 req.rid, ((), 0, None))
             n = (n_fresh if n_fresh is not None else
@@ -651,8 +783,10 @@ class Engine:
         if to_reset:
             mask = np.zeros((self.slots,), bool)
             mask[to_reset] = True
+            self.tracer.begin(self._ev_reset)
             self.state = self._run_compiled(
                 "reset", self._reset_fn, self.state, jnp.asarray(mask))
+            self.tracer.end(self._ev_reset)
         if seeds:
             # Install the forked prefix *after* any reset: the slot's table
             # row starts with the shared blocks and its length starts at the
@@ -687,14 +821,15 @@ class Engine:
         now = time.monotonic()
         t_submit = self._submit_t.pop(req.rid)   # fully consumed here; a
         t_first = self._first_tok_t.pop(req.rid, now)  # long-lived engine
-        self.metrics.requests.append(RequestMetrics(  # must not leak these
+        self.metrics.note_request(RequestMetrics(  # must not leak these
             rid=req.rid, prompt_len=req.prompt_len,
             new_tokens=len(req.out_tokens),
             ttft_s=t_first - t_submit,
             latency_s=now - t_submit,
             queue_steps=(req.first_token_step or self._step) - req.submit_step,
             cached_tokens=req.cached_tokens,
-        ))
+        ), self._request_log)
+        self.tracer.async_end(self._ev_req_decode, req.rid)
 
     def _record_token(self, req: Request, token: int) -> None:
         if req.first_token_step is None:
@@ -715,6 +850,7 @@ class Engine:
         decode step, so incompressible traffic pays zero speculative
         overhead beyond the host-side lookup."""
         drafts: Dict[int, np.ndarray] = {}
+        self.tracer.begin(self._ev_draft)     # host-side n-gram lookups
         for r in reqs:
             if r.remaining > 1:    # a 1-token budget can't use a draft
                 # remaining - 1: the bonus token always rides along, so the
@@ -724,6 +860,7 @@ class Engine:
                                        k=min(self.spec.k, r.remaining - 1))
                 if len(d):
                     drafts[r.rid] = d
+        self.tracer.end(self._ev_draft)
         if not drafts:
             return False
         width = bucket_for(max(len(d) for d in drafts.values()), self.spec.k)
@@ -750,11 +887,14 @@ class Engine:
         # converts them in ~µs, where a standalone jnp.asarray dispatches an
         # un-jitted XLA copy (~100-700µs each on CPU — real money against a
         # ~1ms verify step).
+        self.tracer.begin(self._ev_verify)
         greedy, n_new, self.state = self._run_compiled(
             f"verify{width}", self._verify_fn, self.params, self.state,
             tokens, active, limits, eos)
         greedy, n_new = np.asarray(greedy), np.asarray(n_new)
-        self.metrics.decode_time_s += time.monotonic() - t_dec
+        self.tracer.end(self._ev_verify)
+        dt_verify = time.monotonic() - t_dec
+        self.metrics.decode_time_s += dt_verify
         emitted = 0
         for r in reqs:
             slot, n = r.slot, int(n_new[r.slot])
@@ -780,6 +920,9 @@ class Engine:
         self.metrics.decode_steps += 1
         self.metrics.decode_tokens += emitted
         self.metrics.spec_ticks += 1
+        # Verify rows: every slot runs the widened step (padding included).
+        self.mfu.note("verify", tokens=emitted, rows=self.slots * width,
+                      time_s=dt_verify)
         return True
 
     # -- the serve loop ------------------------------------------------------
@@ -787,9 +930,14 @@ class Engine:
     def tick(self) -> bool:
         """Admit, then execute one scheduler action.  Returns False when no
         work remains."""
+        tr = self.tracer
+        tr.begin(self._ev_tick)
+        tr.begin(self._ev_sched)      # host scheduling: admit + pick action
         self._admit()
         action = self.scheduler.next_action()
+        tr.end(self._ev_sched)
         if action is None:
+            tr.end(self._ev_tick)
             return self.scheduler.has_work
         self._step += 1
         if action[0] == "prefill":
@@ -798,12 +946,27 @@ class Engine:
             self._sync_tables()
             tokens = jnp.asarray(
                 req.prompt[None, req.prefilled:req.prefilled + chunk])
+            tr.begin(self._ev_prefill)
+            t_pre = time.monotonic()
             logits, self.state = self._run_compiled(
                 f"chunk{chunk}", self._chunk_fn,
                 self.params, self.state, tokens, self._slot_ids[req.slot])
+            # Sync so the span/MFU time covers the device step, not just its
+            # dispatch.  Chunks are state-dependent (the next chunk consumes
+            # this one's KV writes), so total prefill wall time is unchanged.
+            logits = jax.block_until_ready(logits)
+            dt_pre = time.monotonic() - t_pre
+            tr.end(self._ev_prefill)
             self.scheduler.on_prefill(req, chunk, self._step)
             self.metrics.prefill_chunks += 1
             self.metrics.prefill_tokens += chunk
+            self.metrics.prefill_time_s += dt_pre
+            self.mfu.note("prefill", tokens=chunk, rows=chunk, time_s=dt_pre)
+            if req.phase is Phase.DECODE:
+                # Prompt complete: close the request's prefill span, open its
+                # decode span (closed in _finish).
+                tr.async_end(self._ev_req_prefill, req.rid)
+                tr.async_begin(self._ev_req_decode, req.rid)
             if req.phase is Phase.DECODE and self.prefix_cache is not None:
                 # Prompt fully in the pool: publish its full blocks for
                 # later requests (the cache takes its own refs; the partial
@@ -836,11 +999,19 @@ class Engine:
             active = np.zeros((self.slots,), bool)
             active[[r.slot for r in reqs]] = True
             t_dec = time.monotonic()
+            tr.begin(self._ev_decode)
             logits, self.state = self._run_compiled(
                 "decode", self._decode_fn, self.params, self.state, tokens,
                 active)
+            # np.asarray blocks on the result, so the span covers the step.
             next_tok = np.argmax(np.asarray(logits)[:, -1], axis=-1)
-            self.metrics.decode_time_s += time.monotonic() - t_dec
+            tr.end(self._ev_decode)
+            dt_dec = time.monotonic() - t_dec
+            self.metrics.decode_time_s += dt_dec
+            # Decode rows: all slots execute (padding rows included) —
+            # tokens counts only the active requests' commits.
+            self.mfu.note("decode", tokens=len(reqs), rows=self.slots,
+                          time_s=dt_dec)
             for r in reqs:
                 self._record_token(r, int(next_tok[r.slot]))
             self.metrics.decode_steps += 1
@@ -849,6 +1020,9 @@ class Engine:
             self.metrics.peak_blocks_in_use, self.alloc.in_use)
         self.metrics.occupancy_sum += self.alloc.occupancy()
         self.metrics.occupancy_samples += 1
+        tr.counter(self._ev_kv_in_use, self.alloc.in_use)
+        tr.counter(self._ev_kv_reserved, self.alloc.reserved)
+        tr.end(self._ev_tick)
         return True
 
     def run(self, max_ticks: Optional[int] = None) -> Dict[int, np.ndarray]:

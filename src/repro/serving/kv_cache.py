@@ -248,10 +248,20 @@ class BlockAllocator:
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))  # pop() -> 1 first
         self._refs: Dict[int, int] = {}
         self._reserved = 0
+        # Lifetime traffic counters (repro.obs): cumulative draws/returns and
+        # the high-water mark — cheap int adds, always on.
+        self.total_allocated = 0
+        self.total_freed = 0
+        self.peak_in_use = 0
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    @property
+    def reserved(self) -> int:
+        """Blocks promised to admitted requests but not yet drawn."""
+        return self._reserved
 
     @property
     def available(self) -> int:
@@ -283,6 +293,9 @@ class BlockAllocator:
             self._refs[b] = 1
         if reserved:
             self._reserved = max(0, self._reserved - n)
+        self.total_allocated += n
+        if self.in_use > self.peak_in_use:
+            self.peak_in_use = self.in_use
         return out
 
     def ref(self, ids: List[int]) -> None:
@@ -324,6 +337,7 @@ class BlockAllocator:
         self._reserved = max(0, self._reserved - unreserve)
         if rereserve:
             self._reserved += returned
+        self.total_freed += returned
         return returned
 
     def check(self) -> None:
@@ -342,6 +356,17 @@ class BlockAllocator:
         assert all(rc > 0 for rc in self._refs.values()), "non-positive refcount"
         assert 0 <= self._reserved <= len(self._free), \
             f"reservations ({self._reserved}) exceed the free list ({len(self._free)})"
+
+    def stats(self) -> dict:
+        """Counter snapshot for metrics export / trace annotation."""
+        return {
+            "in_use": self.in_use,
+            "reserved": self._reserved,
+            "free": len(self._free),
+            "total_allocated": self.total_allocated,
+            "total_freed": self.total_freed,
+            "peak_in_use": self.peak_in_use,
+        }
 
 
 def fork_blocks(alloc: BlockAllocator, ids: List[int]) -> List[int]:

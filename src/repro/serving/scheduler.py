@@ -101,6 +101,8 @@ class Scheduler:
         self._next_rid = 0
         self._prefer_prefill = True   # round-robin flip between phases
         self.rejected = 0
+        self.admitted_total = 0       # requests that ever reached a slot
+        self.peak_queue_depth = 0     # admission-queue high-water mark
 
     # -- admission -----------------------------------------------------------
 
@@ -116,6 +118,8 @@ class Scheduler:
         )
         self._next_rid += 1
         self.queue.append(req)
+        if len(self.queue) > self.peak_queue_depth:
+            self.peak_queue_depth = len(self.queue)
         return req
 
     def admit(
@@ -139,6 +143,7 @@ class Scheduler:
             req.prefilled = req.cached_tokens
             self.slots[slot] = req
             admitted.append((slot, req))
+        self.admitted_total += len(admitted)
         return admitted
 
     # -- tick policy ---------------------------------------------------------

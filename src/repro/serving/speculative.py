@@ -91,6 +91,16 @@ class NgramDrafter:
     def __init__(self, config: SpecConfig):
         self.config = config
         self._corpus: list = []            # most recent last
+        # Lookup economics (repro.obs): how often drafting was attempted,
+        # how often it proposed anything, and how many tokens it proposed.
+        self.draft_calls = 0
+        self.draft_hits = 0
+        self.drafted_tokens = 0
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of draft() calls that proposed at least one token."""
+        return self.draft_hits / self.draft_calls if self.draft_calls else 0.0
 
     def remember(self, stream: np.ndarray) -> None:
         """Retain a committed stream (prompt + generated tokens of a
@@ -132,6 +142,7 @@ class NgramDrafter:
         k = cfg.k if k is None else min(k, cfg.k)
         context = np.asarray(context, np.int32)
         L = len(context)
+        self.draft_calls += 1
         if k < 1 or L < 1:
             return np.empty((0,), np.int32)
         for n in range(min(cfg.ngram_max, L), cfg.ngram_min - 1, -1):
@@ -143,6 +154,8 @@ class NgramDrafter:
                     if found is not None:
                         break
             if found is not None:
+                self.draft_hits += 1
+                self.drafted_tokens += len(found)
                 return np.asarray(found, np.int32)
         return np.empty((0,), np.int32)
 

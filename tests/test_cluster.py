@@ -499,3 +499,70 @@ def test_cluster_metrics_aggregate_folds_replicas():
     assert m.ttft_p50_s == pytest.approx(0.02)
     assert m.per_replica_requests == [2, 1]
     assert "replicas=2" in m.summary()
+
+
+def test_cluster_metrics_aggregate_empty_replicas():
+    """Replicas that finished nothing must aggregate to clean zeros (the
+    serve loop calls aggregate() on fresh pools before traffic arrives)."""
+    from repro.serving.engine import EngineMetrics
+
+    class _Pool:
+        class _E:
+            def __init__(self):
+                self.metrics = EngineMetrics()
+
+        engines = None
+
+    pool = _Pool()
+    pool.engines = [_Pool._E(), _Pool._E(), _Pool._E()]
+    m = cmetrics.aggregate(pool, elapsed_s=1.0)
+    assert m.requests == 0 and m.replicas == 3
+    assert m.ttft_p50_s == 0.0 and m.ttft_p95_s == 0.0
+    assert m.req_tok_s_p50 == 0.0
+    assert m.throughput_tok_s == 0.0
+    assert m.per_replica_requests == [0, 0, 0]
+    assert m.shed_rate == 0.0            # zero offered -> 0.0, not a div/0
+    assert "replicas=3" in m.summary()
+
+
+def test_cluster_metrics_shed_rate_zero_offered():
+    m = cmetrics.ClusterMetrics()
+    assert m.shed_rate == 0.0
+    m.shed, m.offered = 5, 10
+    assert m.shed_rate == pytest.approx(0.5)
+
+
+def test_cluster_aggregate_merged_hist_matches_raw_percentiles():
+    """When a replica's raw request log was capped, aggregate() falls back
+    to merged histograms — their percentiles must track the exact nearest-
+    rank values within the histogram's resolution."""
+    from repro.serving.engine import EngineMetrics, RequestMetrics
+
+    rng = np.random.default_rng(7)
+    ttfts = [float(t) for t in rng.lognormal(-3.5, 0.8, size=60)]
+
+    def _engine(sub, capped):
+        class _E:
+            pass
+        e = _E()
+        e.metrics = EngineMetrics()
+        for i, t in enumerate(sub):
+            # log_limit=1 forces the dropped path; None keeps the raw log
+            e.metrics.note_request(RequestMetrics(
+                rid=i, prompt_len=2, new_tokens=4, ttft_s=t,
+                latency_s=t + 0.05, queue_steps=0), 1 if capped else None)
+        return e
+
+    class _Pool:
+        engines = None
+
+    for capped in (False, True):
+        pool = _Pool()
+        pool.engines = [_engine(ttfts[:40], capped),
+                        _engine(ttfts[40:], capped)]
+        m = cmetrics.aggregate(pool, elapsed_s=1.0)
+        assert m.requests == len(ttfts)
+        rel = m.ttft_hist.rel_error if capped else 1e-9
+        for q, got in ((50, m.ttft_p50_s), (95, m.ttft_p95_s)):
+            assert got == pytest.approx(percentile(ttfts, q), rel=rel), \
+                (capped, q)
