@@ -1,31 +1,43 @@
 """Observability overhead benchmark (repro.obs).
 
-Paper artifact: none — this guards the PR 8 acceptance bar that tracing is
+Paper artifact: none — this guards the acceptance bar that tracing is
 cheap enough to leave on: the ring-buffer event path must cost < 2% of a
-decode tick (ISSUE/EXPERIMENTS.md §Observability).  Rows:
+decode tick (EXPERIMENTS.md §Observability).  Rows:
 
-  obs/event_ns            mean cost of one ring event (begin/end pair / 2):
-                          a few scalar numpy stores, no allocation, no lock
-  obs/decode_tick_us_off  mean decode-tick wall time, tracing off
-                          (NULL_TRACER no-op dispatch)
-  obs/decode_tick_us_on   same engine/workload with a live Tracer
-  obs/decode_overhead_pct on-vs-off decode-tick delta (bar: < 2; can read
-                          negative in the noise — both sides are ~µs)
-  obs/trace_events        events the traced run exported
+  obs/event_ns             mean cost of one ring event (begin/end pair /
+                           2): a few scalar numpy stores, no alloc, no lock
+  obs/decode_tick_us_off   mean decode-tick wall time, tracing off
+                           (NULL_TRACER no-op dispatch)
+  obs/decode_tick_us_on    same engine/workload with a live Tracer but
+                           flow events off (the pre-flow tracing baseline)
+  obs/decode_tick_us_flow  live Tracer *with* per-request flow events and
+                           instants (Engine default when tracing)
+  obs/decode_overhead_pct  on-vs-off decode-tick delta (bar: < 2; can read
+                           negative in the noise — both sides are ~µs)
+  obs/flow_overhead_pct    flow-vs-on decode-tick delta: what the request-
+                           flow arrows add over plain span tracing (same
+                           < 2 bar, same noise caveat)
+  obs/trace_events         events the flow-traced run exported
+  obs/recorder_snapshot_us wall time of one FlightRecorder.trigger() on
+                           the traced engine (ring snapshot + metric
+                           sources + JSON write)
+  obs/incident_bundles     bundles written into BENCH_incidents/
 
-The traced run's Chrome-trace JSON is written to BENCH_trace.json at the
-repo root — CI uploads it next to BENCH_smoke.json, so every smoke run
-leaves an openable Perfetto timeline behind (README §Observability).
+The flow-traced run's Chrome-trace JSON is written to BENCH_trace.json at
+the repo root and its incident bundle into BENCH_incidents/ — CI uploads
+both next to BENCH_smoke.json, so every smoke run leaves an openable
+Perfetto timeline and a sample incident bundle behind (README
+§Observability).
 
-Methodology: both engines share one set of jitted steps (one compile for
+Methodology: all engines share one set of jitted steps (one compile for
 the whole section) and replay the same seeded workload; each mode's tick
 time is the best (min) mean over ITERS interleaved runs, so shared-host
-load spikes hit both modes alike.  The per-event cost is measured directly
+load spikes hit all modes alike.  The per-event cost is measured directly
 over a large event count — the analytic bound events-per-tick x event_ns
 is what tests/test_obs.py asserts against the 2% bar (robust), while the
 A/B wall-clock rows here are the informational measurement.
 
-Expected runtime: ~30 s on CPU; REPRO_BENCH_FAST=1 shrinks the workload.
+Expected runtime: ~45 s on CPU; REPRO_BENCH_FAST=1 shrinks the workload.
 """
 
 from __future__ import annotations
@@ -43,6 +55,7 @@ ITERS = 2 if FAST else 3
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TRACE_PATH = os.path.join(ROOT, "BENCH_trace.json")
+INCIDENT_DIR = os.path.join(ROOT, "BENCH_incidents")
 
 
 def _event_ns() -> float:
@@ -68,7 +81,7 @@ def _engine_rows():
 
     from repro import configs
     from repro.models import model as M
-    from repro.obs import write_chrome_trace
+    from repro.obs import FlightRecorder, write_chrome_trace
     from repro.serving.engine import Engine
 
     cfg = configs.get_smoke("gemma3-1b")
@@ -82,10 +95,11 @@ def _engine_rows():
                   block_size=8, max_chunk=16)
     warm.warmup()
 
-    def run(trace: bool):
+    def run(trace: bool, flow: bool):
         """One full serve of the workload; returns (mean tick µs, engine)."""
         eng = Engine(cfg, params=params, slots=SLOTS, max_seq=max_seq,
-                     block_size=8, max_chunk=16, trace=trace)
+                     block_size=8, max_chunk=16, trace=trace,
+                     trace_flow=flow)
         eng.share_steps_from(warm)
         eng.warmup()                    # hits warm's jit caches: no compiles
         for p in prompts:
@@ -95,30 +109,51 @@ def _engine_rows():
         tick_us = m.decode_time_s / max(1, m.decode_steps) * 1e6
         return tick_us, eng
 
-    tick_off = tick_on = float("inf")
+    tick_off = tick_on = tick_flow = float("inf")
     traced = None
     for _ in range(ITERS):
-        t, _e = run(trace=False)
+        t, _e = run(trace=False, flow=False)
         tick_off = min(tick_off, t)
-        t, e = run(trace=True)
-        if t < tick_on:
-            tick_on, traced = t, e
+        t, _e = run(trace=True, flow=False)
+        tick_on = min(tick_on, t)
+        t, e = run(trace=True, flow=True)
+        if t < tick_flow:
+            tick_flow, traced = t, e
 
     doc = write_chrome_trace(
         TRACE_PATH, [traced.tracer],
         metadata={"arch": cfg.name, "source": "benchmarks/obs_bench.py"})
     overhead_pct = (tick_on - tick_off) / tick_off * 100.0
+    flow_pct = (tick_flow - tick_on) / tick_on * 100.0
+
+    # Flight-recorder snapshot cost on the traced engine: full ring tail +
+    # every standard metric source + the JSON write.
+    rec = FlightRecorder(INCIDENT_DIR,
+                         metadata={"source": "benchmarks/obs_bench.py"})
+    rec.attach_engine(traced)
+    t0 = time.perf_counter()
+    rec.trigger("bench-smoke")
+    snapshot_us = (time.perf_counter() - t0) * 1e6
 
     return [
         {"name": "obs/decode_tick_us_off",
          "value": round(tick_off, 1), "derived": ""},
         {"name": "obs/decode_tick_us_on",
          "value": round(tick_on, 1), "derived": round(tick_off, 1)},
+        {"name": "obs/decode_tick_us_flow",
+         "value": round(tick_flow, 1), "derived": round(tick_on, 1)},
         {"name": "obs/decode_overhead_pct",
-         "value": round(overhead_pct, 2), "derived": "< 2"},
+         "value": round(overhead_pct, 2), "derived": "< 2 (informational)"},
+        {"name": "obs/flow_overhead_pct",
+         "value": round(flow_pct, 2), "derived": "< 2 (informational)"},
         {"name": "obs/trace_events",
          "value": len(doc["traceEvents"]),
          "derived": f"-> {os.path.basename(TRACE_PATH)}"},
+        {"name": "obs/recorder_snapshot_us",
+         "value": round(snapshot_us, 1), "derived": ""},
+        {"name": "obs/incident_bundles",
+         "value": len(rec.incidents),
+         "derived": f"-> {os.path.basename(INCIDENT_DIR)}/"},
     ]
 
 

@@ -38,6 +38,7 @@ _LAZY = {
     "pick_round_robin": ("repro.cluster.router", "pick_round_robin"),
     "replay": ("repro.cluster.traffic", "replay"),
     "shared_system_prompt": ("repro.cluster.traffic", "shared_system_prompt"),
+    "slo_snapshot": ("repro.cluster.metrics", "slo_snapshot"),
 }
 
 __all__ = sorted(_LAZY)

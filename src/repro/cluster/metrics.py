@@ -4,8 +4,10 @@ One struct answering the system-level questions a single ``EngineMetrics``
 cannot: tail TTFT across every replica *including router queue wait*,
 per-replica occupancy (is the load balancer actually balancing?), prefix
 cache effectiveness, and the shed rate the backpressure policy produced.
-Percentiles reuse ``serving.engine.percentile`` so per-engine and
-cluster-wide tails are computed with one definition.
+Percentiles reuse ``repro.obs.percentile`` (the shared nearest-rank
+helper) so per-engine and cluster-wide tails are computed with one
+definition; ``slo_snapshot`` feeds the merged result into the SLO monitor
+(obs/slo.py).
 
 Aggregation is histogram-native (repro.obs.hist): each engine's streaming
 TTFT/rate sketches merge in O(replicas x buckets), so cluster tails stay
@@ -22,8 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-from repro.obs import Histogram, MfuMeter
-from repro.serving.engine import percentile
+from repro.obs import Histogram, MfuMeter, percentile
 
 
 @dataclasses.dataclass
@@ -50,6 +51,7 @@ class ClusterMetrics:
     # and the pool-wide per-phase utilization meter.  None until aggregate()
     # fills them.
     ttft_hist: Optional[Histogram] = None
+    latency_hist: Optional[Histogram] = None
     tok_s_hist: Optional[Histogram] = None
     mfu: Optional[MfuMeter] = None
 
@@ -115,6 +117,8 @@ class ClusterMetrics:
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "ttft_hist": (self.ttft_hist.to_dict()
                           if self.ttft_hist is not None else None),
+            "latency_hist": (self.latency_hist.to_dict()
+                             if self.latency_hist is not None else None),
             "tok_s_hist": (self.tok_s_hist.to_dict()
                            if self.tok_s_hist is not None else None),
             "mfu": self.mfu.as_dict() if self.mfu is not None else None,
@@ -130,6 +134,7 @@ def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
     m = ClusterMetrics(replicas=len(engines), elapsed_s=elapsed_s)
     per_req, dropped = [], 0
     m.ttft_hist, m.tok_s_hist = Histogram(), Histogram()
+    m.latency_hist = Histogram()
     for e in engines:
         m.decode_tokens += e.metrics.decode_tokens
         m.prefill_tokens += e.metrics.prefill_tokens
@@ -141,6 +146,7 @@ def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
         per_req.extend(e.metrics.requests)
         dropped += e.metrics.requests_dropped
         m.ttft_hist.merge(e.metrics.ttft_hist)
+        m.latency_hist.merge(e.metrics.latency_hist)
         m.tok_s_hist.merge(e.metrics.tok_s_hist)
     m.mfu = MfuMeter.merged([e.metrics.mfu for e in engines])
     m.requests = len(per_req) + dropped
@@ -185,3 +191,19 @@ def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
         m.offered = m.requests + engine_shed
         m.shed = engine_shed
     return m
+
+
+def slo_snapshot(m: ClusterMetrics) -> dict:
+    """ClusterMetrics -> the snapshot dict obs/slo.py::SloMonitor.observe()
+    evaluates (same keys as obs.engine_snapshot, so one SLO spec serves
+    both the single-engine and cluster paths).  The merged histograms make
+    cluster-wide burn equal to the burn of the concatenated per-replica
+    request streams."""
+    return {
+        "ttft": m.ttft_hist,
+        "latency": m.latency_hist,
+        "tok_s": m.tok_s_hist,
+        "shed": m.shed,
+        "offered": m.offered,
+        "mfu_decode": m.mfu.mfu("decode") if m.mfu is not None else 0.0,
+    }

@@ -41,12 +41,13 @@ class ClusterRequest:
 
     __slots__ = ("crid", "prompt", "max_new", "replica", "tokens", "shed",
                  "error", "done", "t_submit", "t_engine_submit", "t_done",
-                 "engine_metrics")
+                 "engine_metrics", "trace_id")
 
     def __init__(self, crid: int, prompt, max_new: int):
         self.crid = crid
         self.prompt = np.asarray(prompt, np.int32)
         self.max_new = max_new
+        self.trace_id = -1                   # minted at router admission
         self.replica: Optional[int] = None
         self.tokens: Optional[np.ndarray] = None
         self.shed = False
@@ -154,7 +155,12 @@ class Replica:
                 return
             try:
                 h.t_engine_submit = time.monotonic()
-                req = self.engine.submit(h.prompt, h.max_new)
+                # Thread the router-minted trace id into the engine so the
+                # request's flow chain crosses from the router lane into
+                # this replica's lane under one id.
+                req = self.engine.submit(
+                    h.prompt, h.max_new,
+                    trace_id=(h.trace_id if h.trace_id >= 0 else None))
             except Exception as e:          # oversize prompt etc: fail the
                 h.error = e                 # handle, not the replica thread
                 h.done.set()
@@ -303,15 +309,19 @@ class ReplicaPool:
         for r in self.replicas:
             r.stop()
 
-    def export_trace(self, path: str, *, metadata: Optional[dict] = None
-                     ) -> dict:
+    def export_trace(self, path: str, *, metadata: Optional[dict] = None,
+                     extra_tracers=()) -> dict:
         """Write the pool's Chrome-trace JSON (requires trace=True); one
-        process lane per replica.  Call after stop() / run_sync() — the
-        rings are single-writer and read here from the caller's thread."""
+        process lane per replica.  `extra_tracers` adds non-pool lanes on
+        the same clock (launch/serve.py appends the router's tracer so
+        admission flows connect to replica lanes).  Call after stop() /
+        run_sync() — the rings are single-writer and read here from the
+        caller's thread."""
         if not self.tracers:
             raise RuntimeError(
                 "pool was built without tracing; pass ReplicaPool(trace=True)")
-        return write_chrome_trace(path, self.tracers, metadata=metadata)
+        return write_chrome_trace(path, self.tracers + list(extra_tracers),
+                                  metadata=metadata)
 
     def submit_to(self, idx: int, handle: ClusterRequest) -> None:
         self.replicas[idx].submit(handle)

@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.cluster.replica import ClusterRequest, ReplicaPool, ReplicaView
+from repro.obs import NULL_TRACER
 
 # Tokens hashed by prefix-affinity: one engine KV block's worth keeps the
 # key aligned with what the prefix cache can actually share.
@@ -74,7 +75,7 @@ class Router:
 
     def __init__(self, pool: ReplicaPool, policy="round-robin", *,
                  max_pending: Optional[int] = None, seed: int = 0,
-                 async_dispatch: bool = True):
+                 async_dispatch: bool = True, tracer=None, recorder=None):
         if isinstance(policy, str):
             if policy not in POLICIES:
                 raise ValueError(
@@ -84,6 +85,20 @@ class Router:
         self.policy = policy
         self.max_pending = max_pending     # in-flight bound; None = unbounded
         self.seed = seed
+        # Distributed request tracing: the router lane mints every accepted
+        # request's trace id (= crid, cluster-unique) and starts its flow
+        # chain; replicas continue the chain under the same id.  The tracer
+        # is written from submit() callers *and* the dispatcher thread, so
+        # — unlike the single-writer engine rings — every write here stays
+        # under self._lock.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._ev_admit = self.tracer.intern("admit")
+        self._ev_route = self.tracer.intern("route")
+        self._ev_shed = self.tracer.intern("shed")
+        self._ev_flow = self.tracer.intern("req")
+        # Anomaly capture (obs/recorder.py): a shed fires a rate-limited
+        # incident bundle — the evidence of *why* backpressure hit.
+        self.recorder = recorder
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._queue: "deque[ClusterRequest]" = deque()
@@ -115,14 +130,30 @@ class Router:
             if (self.max_pending is not None
                     and self._in_flight_locked() >= self.max_pending):
                 self.shed += 1
-                return None
-            h = ClusterRequest(self._crid, prompt, max_new)
-            self._crid += 1
-            self._queue.append(h)
-            self._live.append(h)
-            self.handles.append(h)
-            self._not_empty.notify()
-            return h
+                self.tracer.instant(self._ev_shed, len(self._live))
+                recorder = self.recorder
+            else:
+                h = ClusterRequest(self._crid, prompt, max_new)
+                h.trace_id = h.crid
+                self._crid += 1
+                self._queue.append(h)
+                self._live.append(h)
+                self.handles.append(h)
+                if self.tracer.enabled:
+                    # flows bind to the open slice: chain starts in a tiny
+                    # admit slice on the router lane
+                    self.tracer.begin(self._ev_admit)
+                    self.tracer.flow_start(self._ev_flow, h.trace_id)
+                    self.tracer.end(self._ev_admit)
+                self._not_empty.notify()
+                return h
+        # shed path, outside the lock: the recorder snapshots tracers and
+        # metric sources, which must not run under the admission lock
+        if recorder is not None:
+            recorder.trigger("shed", extra={
+                "offered": self.offered, "shed": self.shed,
+                "max_pending": self.max_pending})
+        return None
 
     @property
     def shed_rate(self) -> float:
@@ -144,7 +175,17 @@ class Router:
             # block briefly, and submit() must stay non-blocking.
             idx = self.policy(self.pool.views(), h.prompt,
                               step=step, seed=self.seed)
+            self._trace_route(h)
             self.pool.submit_to(idx, h)
+
+    def _trace_route(self, h: ClusterRequest) -> None:
+        """Step the request's flow at the routing decision (locked — see
+        __init__ on the router tracer's shared-writer discipline)."""
+        if self.tracer.enabled:
+            with self._lock:
+                self.tracer.begin(self._ev_route)
+                self.tracer.flow_step(self._ev_flow, h.trace_id)
+                self.tracer.end(self._ev_route)
 
     def dispatch_sync(self) -> None:
         """Drain the admission queue on the caller's thread (the
@@ -158,6 +199,7 @@ class Router:
                 self.dispatched += 1
             idx = self.policy(self.pool.views(), h.prompt,
                               step=step, seed=self.seed)
+            self._trace_route(h)
             self.pool.submit_to(idx, h)
 
     # -- lifecycle -----------------------------------------------------------

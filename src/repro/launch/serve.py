@@ -126,6 +126,39 @@ def _timed(fn) -> float:
     return time.perf_counter() - t0
 
 
+def _build_recorder(args, *, metadata=None):
+    """FlightRecorder for --incident-dir (None when the flag is off)."""
+    if not getattr(args, "incident_dir", ""):
+        return None
+    from repro.obs import FlightRecorder
+
+    # min_interval_s: a shed storm writes one bundle per reason per second,
+    # not one per refused request.
+    return FlightRecorder(args.incident_dir, min_interval_s=1.0,
+                          metadata=metadata)
+
+
+def _evaluate_slo(args, snapshot, recorder, engines):
+    """--slo post-run evaluation: print the burn-rate report, capture
+    breach bundles, and run the built-in engine pressure triggers."""
+    report = None
+    if getattr(args, "slo", ""):
+        from repro.obs import SloMonitor, parse_slo_spec
+
+        monitor = SloMonitor(parse_slo_spec(args.slo))
+        report = monitor.observe(snapshot)
+        print(f"slo: {report.summary()}")
+        if recorder is not None:
+            recorder.record_breaches(report)
+    if recorder is not None:
+        for e in engines:
+            recorder.check_engine(e)
+        if recorder.incidents:
+            print(f"incidents: {len(recorder.incidents)} bundle(s) -> "
+                  + ", ".join(recorder.incidents))
+    return report
+
+
 def serve_cluster(cfg, args) -> None:
     """Multi-replica serving (repro.cluster): pool + router + traffic."""
     from repro import cluster
@@ -140,6 +173,21 @@ def serve_cluster(cfg, args) -> None:
         prefix_cache=args.prefix_cache,
         speculative=args.draft_k if args.speculative else False,
         trace=bool(args.trace_out))
+    # Router lane for the distributed trace: admission/shed/route events
+    # live on their own pid above the replica lanes, and every request's
+    # flow arrow starts here.
+    router_tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        router_tracer = Tracer(name="router", pid=args.replicas)
+    recorder = _build_recorder(
+        args, metadata={"arch": cfg.name, "replicas": args.replicas})
+    if recorder is not None:
+        if router_tracer is not None:
+            recorder.add_tracer(router_tracer)
+        for i, e in enumerate(pool.engines):
+            recorder.attach_engine(e, name=f"replica{i}")
     t0 = time.time()
     pool.warmup(verbose=True)
     print(f"warmup: {args.replicas} replicas in {time.time() - t0:.1f}s "
@@ -149,7 +197,8 @@ def serve_cluster(cfg, args) -> None:
         max_prompt=args.prompt_len, max_new=(2, args.gen_len))
     pool.start()
     router = cluster.Router(pool, policy=args.router_policy,
-                            max_pending=args.max_pending or None)
+                            max_pending=args.max_pending or None,
+                            tracer=router_tracer, recorder=recorder)
     t0 = time.time()
     handles, shed = cluster.replay(trace, router.submit)
     router.drain()
@@ -160,10 +209,12 @@ def serve_cluster(cfg, args) -> None:
         print(f"  replica[{i}]: {e.metrics.summary()}")
     router.close()
     pool.stop()     # replica threads must be parked before reading the rings
+    _evaluate_slo(args, cluster.slo_snapshot(m), recorder, pool.engines)
     if args.trace_out:
         doc = pool.export_trace(
             args.trace_out, metadata={"arch": cfg.name,
-                                      "replicas": args.replicas})
+                                      "replicas": args.replicas},
+            extra_tracers=[router_tracer] if router_tracer else ())
         print(f"trace: {len(doc['traceEvents'])} events -> {args.trace_out} "
               f"(open in https://ui.perfetto.dev)")
     if args.metrics_json:
@@ -231,6 +282,15 @@ def main(argv=None):
     ap.add_argument("--metrics-json", default="",
                     help="write the metrics snapshot (scalar gauges, "
                          "percentile histograms, per-phase MFU) as JSON")
+    ap.add_argument("--slo", default="",
+                    help="SLO spec evaluated after the run, e.g. "
+                         "'ttft_p95=0.25,latency_p95=1.0,shed_rate=0.05,"
+                         "mfu_floor=1e-6' (multi-window burn rates; see "
+                         "README §Observability)")
+    ap.add_argument("--incident-dir", default="",
+                    help="flight-recorder output directory: sheds, SLO "
+                         "breaches, and allocator/spec pressure write "
+                         "self-contained JSON incident bundles here")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch)
@@ -276,6 +336,13 @@ def main(argv=None):
           f"= {pool_tokens} tokens shared "
           f"(dense would pin {dense_tokens} = slots x max_seq per layer)")
     print("sample continuations:", gen[:2, :8].tolist())
+
+    recorder = _build_recorder(args, metadata={"arch": cfg.name})
+    if recorder is not None:
+        recorder.attach_engine(eng)
+    from repro.obs import engine_snapshot
+
+    _evaluate_slo(args, engine_snapshot(eng), recorder, [eng])
 
     if args.trace_out:
         from repro.obs import write_chrome_trace

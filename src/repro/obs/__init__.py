@@ -1,24 +1,31 @@
-"""repro.obs — live utilization tracing and streaming metrics.
+"""repro.obs — live utilization tracing, streaming metrics, and SLOs.
 
-Three pieces, one layer (see each module's docstring):
+The pieces, one layer (see each module's docstring):
 
-  * trace.py  — pre-allocated ring-buffer span/event log (per-request
-                lifecycle + per-tick phases), single-writer per engine
-                thread, Chrome-trace exportable;
-  * hist.py   — log-bucketed streaming histograms with nearest-rank
-                percentiles and merge (bounded replacement for raw request
-                lists in engine/cluster metrics);
-  * mfu.py    — per-phase utilization (measured vs the cycle-model/roofline
-                analytic bound) and MFU gauges, the paper's Table 2
-                utilization computed live at serving time;
-  * export.py — Perfetto/chrome://tracing JSON export.
+  * trace.py    — pre-allocated ring-buffer span/event log (per-request
+                  lifecycle + per-tick phases + cross-lane request flows),
+                  single-writer per engine thread, Chrome-trace exportable;
+  * hist.py     — log-bucketed streaming histograms with nearest-rank
+                  percentiles and merge (bounded replacement for raw
+                  request lists in engine/cluster metrics), plus the one
+                  shared nearest-rank ``percentile`` helper;
+  * mfu.py      — per-phase utilization (measured vs the cycle-model/
+                  roofline analytic bound) and MFU gauges, the paper's
+                  Table 2 utilization computed live at serving time;
+  * export.py   — Perfetto/chrome://tracing JSON export, flow arrows and
+                  instants included;
+  * slo.py      — declarative SLO targets with multi-window burn-rate
+                  evaluation and an ok/warn/breach state machine;
+  * recorder.py — anomaly flight recorder: ring-buffer + metric snapshots
+                  into JSON incident bundles on breach/pressure triggers.
 
 Threaded through serving/engine.py (``Engine(trace=True)``),
-cluster/replica.py (``ReplicaPool(trace=True)``), and launch/serve.py
-(``--trace-out`` / ``--metrics-json``).
+cluster/replica.py (``ReplicaPool(trace=True)``), cluster/router.py
+(``Router(tracer=..., recorder=...)``), and launch/serve.py
+(``--trace-out`` / ``--metrics-json`` / ``--slo`` / ``--incident-dir``).
 """
 
-from repro.obs.hist import Histogram
+from repro.obs.hist import Histogram, nearest_rank_index, percentile
 from repro.obs.mfu import MfuMeter, PHASES, PhaseStat
 from repro.obs.trace import NULL_TRACER, NullTracer, Tracer
 from repro.obs.export import (
@@ -26,9 +33,22 @@ from repro.obs.export import (
     trace_document,
     write_chrome_trace,
 )
+from repro.obs.slo import (
+    BREACH,
+    OK,
+    WARN,
+    SloMonitor,
+    SloReport,
+    SloTarget,
+    engine_snapshot,
+    parse_slo_spec,
+)
+from repro.obs.recorder import FlightRecorder
 
 __all__ = [
     "Histogram",
+    "nearest_rank_index",
+    "percentile",
     "MfuMeter",
     "PHASES",
     "PhaseStat",
@@ -38,4 +58,13 @@ __all__ = [
     "chrome_trace_events",
     "trace_document",
     "write_chrome_trace",
+    "OK",
+    "WARN",
+    "BREACH",
+    "SloMonitor",
+    "SloReport",
+    "SloTarget",
+    "engine_snapshot",
+    "parse_slo_spec",
+    "FlightRecorder",
 ]

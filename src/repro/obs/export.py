@@ -11,7 +11,14 @@ JSON format (the `traceEvents` array form), loadable in Perfetto
     request id as ``id`` — Perfetto draws each request's
     queued -> prefill -> decode lifecycle as its own async track;
   * COUNTER becomes "C" events — kv_blocks_in_use / queue_depth render as
-    stacked counter charts over the timeline.
+    stacked counter charts over the timeline;
+  * FLOW_START/STEP/END become "s"/"t"/"f" events with ``cat="flow"`` and
+    the request's trace id as ``id`` — Perfetto draws connected arrows from
+    the router's admit slice through every prefill chunk / decode tick the
+    request touched, across pid lanes, to the finishing tick ("f" carries
+    ``bp="e"`` so the arrowhead lands on the enclosing slice);
+  * INSTANT becomes thread-scoped "i" events (shed decisions, prefix-cache
+    hits, CoW evictions) with the payload under ``args``.
 
 Timestamps are microseconds (the format's unit) relative to the earliest
 event across all tracers, so multi-replica traces align on one clock
@@ -29,10 +36,16 @@ from repro.obs.trace import (
     BEGIN,
     COUNTER,
     END,
+    FLOW_END,
+    FLOW_START,
+    FLOW_STEP,
+    INSTANT,
     Tracer,
 )
 
-_PH = {BEGIN: "B", END: "E", COUNTER: "C", ASYNC_BEGIN: "b", ASYNC_END: "e"}
+_PH = {BEGIN: "B", END: "E", COUNTER: "C", ASYNC_BEGIN: "b", ASYNC_END: "e",
+       FLOW_START: "s", FLOW_STEP: "t", FLOW_END: "f", INSTANT: "i"}
+_FLOW_KINDS = (FLOW_START, FLOW_STEP, FLOW_END)
 
 
 def chrome_trace_events(tracers: Iterable[Tracer], *,
@@ -65,6 +78,14 @@ def chrome_trace_events(tracers: Iterable[Tracer], *,
             elif kind in (ASYNC_BEGIN, ASYNC_END):
                 out["cat"] = "request"
                 out["id"] = ev["id"]
+            elif kind in _FLOW_KINDS:
+                out["cat"] = "flow"
+                out["id"] = ev["id"]
+                if kind == FLOW_END:
+                    out["bp"] = "e"
+            elif kind == INSTANT:
+                out["s"] = "t"
+                out["args"] = {"value": ev["value"]}
             events.append(out)
     return events
 

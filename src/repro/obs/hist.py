@@ -35,6 +35,25 @@ DEFAULT_GROWTH = 2.0 ** (1.0 / 32.0)
 _UNDERFLOW = -(1 << 30)          # bucket index for values <= min_value
 
 
+def nearest_rank_index(q: float, n: int) -> int:
+    """0-based nearest-rank index for percentile q over n samples:
+    k = ceil(q/100 * n) - 1, clamped into [0, n-1]."""
+    return min(n - 1, max(0, int(math.ceil(q / 100.0 * n)) - 1))
+
+
+def percentile(vals, q: float) -> float:
+    """Exact nearest-rank percentile over any iterable of numbers; 0.0 when
+    empty.
+
+    The one shared definition — ``serving.engine`` re-exports it and
+    ``Histogram.percentile`` applies the same rank formula to its bucket
+    counts, so list-based and sketch-based tails agree to bucket error."""
+    s = sorted(float(v) for v in vals)
+    if not s:
+        return 0.0
+    return s[nearest_rank_index(q, len(s))]
+
+
 class Histogram:
     __slots__ = ("growth", "min_value", "_log_g", "counts", "count",
                  "total", "min", "max")
@@ -101,8 +120,7 @@ class Histogram:
         half-bucket relative error; 0.0 when empty."""
         if not self.count:
             return 0.0
-        k = min(self.count - 1,
-                max(0, int(math.ceil(q / 100.0 * self.count)) - 1))
+        k = nearest_rank_index(q, self.count)
         seen = 0
         for b in sorted(self.counts):
             seen += self.counts[b]
@@ -113,6 +131,24 @@ class Histogram:
                     rep = self.min_value * self.growth ** (b + 0.5)
                 return min(self.max, max(self.min, rep))
         raise AssertionError("bucket counts do not cover count")  # unreachable
+
+    def count_above(self, threshold: float) -> int:
+        """Observations whose bucket representative exceeds `threshold` —
+        the "bad events" numerator for SLO burn rates (obs/slo.py).  Uses
+        the same representative as percentile() (geometric midpoint clamped
+        into [min, max]), so count_above(percentile(q)) and the rank math
+        stay consistent to bucket error."""
+        if not self.count:
+            return 0
+        bad = 0
+        for b, c in self.counts.items():
+            if b == _UNDERFLOW:
+                rep = self.min
+            else:
+                rep = self.min_value * self.growth ** (b + 0.5)
+            if min(self.max, max(self.min, rep)) > threshold:
+                bad += c
+        return bad
 
     def to_dict(self) -> dict:
         """JSON-serializable form (launch/serve.py --metrics-json)."""

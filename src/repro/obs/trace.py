@@ -32,7 +32,19 @@ Event kinds map 1:1 onto Chrome-trace phases (obs/export.py):
                                  queue_depth, ...)
   ASYNC_BEGIN/END   -> "b"/"e"   id-keyed spans that outlive any one tick
                                  (per-request lifecycle: queued -> prefill
-                                 -> decode, id = request id)
+                                 -> decode, id = trace id)
+  FLOW_*            -> "s"/"t"/"f"  id-keyed flow arrows that CROSS tracer
+                                 lanes (request tracing: the router lane
+                                 starts a flow at admission, each replica
+                                 lane steps it per prefill chunk / decode
+                                 tick, the finishing tick ends it — one
+                                 request renders as a connected arrow chain
+                                 across pid lanes in Perfetto).  Flow
+                                 events bind to the duration slice open at
+                                 their timestamp, so emit them inside a
+                                 BEGIN/END pair.
+  INSTANT           -> "i"       point annotations (shed decisions,
+                                 prefix-cache hits, CoW cache evictions)
 
 Timestamps are `time.perf_counter_ns()` — monotonic, comparable across
 tracers in one process (export aligns every tracer to a common origin).
@@ -52,8 +64,12 @@ END = 1
 COUNTER = 2
 ASYNC_BEGIN = 3
 ASYNC_END = 4
+FLOW_START = 5
+FLOW_STEP = 6
+FLOW_END = 7
+INSTANT = 8
 
-_KIND_NAMES = ("B", "E", "C", "b", "e")
+_KIND_NAMES = ("B", "E", "C", "b", "e", "s", "t", "f", "i")
 
 
 class Tracer:
@@ -144,6 +160,40 @@ class Tracer:
         self._ts[i] = self._clock()
         self._n += 1
 
+    def flow_start(self, code: int, fid: int) -> None:
+        """Open flow `fid` (request trace id) at the enclosing slice."""
+        i = self._n % self.capacity
+        self._kind[i] = FLOW_START
+        self._code[i] = code
+        self._aid[i] = fid
+        self._ts[i] = self._clock()
+        self._n += 1
+
+    def flow_step(self, code: int, fid: int) -> None:
+        i = self._n % self.capacity
+        self._kind[i] = FLOW_STEP
+        self._code[i] = code
+        self._aid[i] = fid
+        self._ts[i] = self._clock()
+        self._n += 1
+
+    def flow_end(self, code: int, fid: int) -> None:
+        i = self._n % self.capacity
+        self._kind[i] = FLOW_END
+        self._code[i] = code
+        self._aid[i] = fid
+        self._ts[i] = self._clock()
+        self._n += 1
+
+    def instant(self, code: int, value: float = 0.0) -> None:
+        """Point annotation (shed / prefix hit / eviction), with a payload."""
+        i = self._n % self.capacity
+        self._kind[i] = INSTANT
+        self._code[i] = code
+        self._value[i] = value
+        self._ts[i] = self._clock()
+        self._n += 1
+
     @contextlib.contextmanager
     def span(self, name: str):
         """Convenience span by name (interns; for warm paths only)."""
@@ -224,6 +274,18 @@ class NullTracer:
         pass
 
     def async_end(self, code: int, aid: int) -> None:
+        pass
+
+    def flow_start(self, code: int, fid: int) -> None:
+        pass
+
+    def flow_step(self, code: int, fid: int) -> None:
+        pass
+
+    def flow_end(self, code: int, fid: int) -> None:
+        pass
+
+    def instant(self, code: int, value: float = 0.0) -> None:
         pass
 
     @contextlib.contextmanager

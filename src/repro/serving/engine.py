@@ -32,7 +32,6 @@ Typical use (launch/serve.py is a thin CLI over exactly this):
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Dict, List, Optional
 
@@ -43,6 +42,7 @@ import numpy as np
 from repro.core.dataflow import GemmShape
 from repro.models import model as M
 from repro.obs import Histogram, MfuMeter, NULL_TRACER, Tracer
+from repro.obs import percentile as _obs_percentile
 from repro.serving import kv_cache as kvc
 from repro.serving.prefill import chunk_buckets
 from repro.serving.scheduler import Phase, Request, Scheduler
@@ -130,15 +130,12 @@ def autotune_for_serving(cfg, *, slots: int, mode: str = "analytic",
 # metrics
 # ---------------------------------------------------------------------------
 
-def percentile(vals, q: float) -> float:
-    """Nearest-rank percentile over a possibly-empty sequence (0.0 when
-    empty).  One definition shared by EngineMetrics and cluster/metrics.py,
-    so per-engine and cluster-wide tails are computed identically."""
-    vals = sorted(float(v) for v in vals)
-    if not vals:
-        return 0.0
-    k = min(len(vals) - 1, max(0, int(math.ceil(q / 100.0 * len(vals))) - 1))
-    return vals[k]
+# Nearest-rank percentile over a possibly-empty sequence (0.0 when empty).
+# The definition lives in repro.obs (obs/hist.py), shared with
+# Histogram.percentile's rank math; the module-level alias stays for
+# back-compat (cluster/metrics.py and tests imported it from here before
+# the helper moved into repro.obs).
+percentile = _obs_percentile
 
 
 @dataclasses.dataclass
@@ -388,6 +385,7 @@ class Engine:
         prefix_cache=False,
         speculative=False,
         trace=False,
+        trace_flow: bool = True,
         request_log: Optional[int] = None,
         seed: int = 0,
         verbose: bool = False,
@@ -505,6 +503,16 @@ class Engine:
         self._ev_req_queued = tc("queued")
         self._ev_req_prefill = tc("req_prefill")
         self._ev_req_decode = tc("req_decode")
+        # Request-flow tracing (cross-lane arrows + annotated instants) on
+        # top of the spans above.  `trace_flow=False` restores the pre-flow
+        # event set — the A/B baseline benchmarks/obs_bench.py measures
+        # flow overhead against.
+        self._flow = bool(trace_flow) and self.tracer.enabled
+        self._ev_submit = tc("submit")
+        self._ev_flow = tc("req")            # one flow chain per request
+        self._ev_shed = tc("shed")
+        self._ev_prefix_hit = tc("prefix_hit")
+        self._ev_evict = tc("cache_evict")
         self._account_kv_pools()
 
         # The decode state (KV pools included) is *donated* to every step:
@@ -704,8 +712,14 @@ class Engine:
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, prompt, max_new: int, *, eos_token: Optional[int] = None
-               ) -> Optional[Request]:
+    def submit(self, prompt, max_new: int, *,
+               eos_token: Optional[int] = None,
+               trace_id: Optional[int] = None) -> Optional[Request]:
+        """Queue a request.  `trace_id` threads an externally-minted id
+        (the router's cluster-wide request id) into this request's flow
+        chain and lifecycle spans; engine-local submissions mint their own,
+        namespaced by the tracer's pid so ids never collide across replica
+        lanes in one export."""
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt: nothing to prefill")
@@ -722,10 +736,26 @@ class Engine:
                 f"({self.num_blocks - 1}); raise num_blocks")
         req = self.scheduler.submit(prompt, max_new, eos_token=eos_token,
                                     step=self._step)
+        tr = self.tracer
         if req is not None:
+            req.trace_id = (int(trace_id) if trace_id is not None
+                            else (tr.pid << 24) + req.rid)
             self._submit_t[req.rid] = time.monotonic()
-            self.tracer.async_begin(self._ev_req_queued, req.rid)
-            self.tracer.counter(self._ev_queue, len(self.scheduler.queue))
+            if self._flow:
+                # Flow events bind to the duration slice open at their
+                # timestamp, so the chain's first link sits in a tiny
+                # "submit" slice (a step when the router already started
+                # the chain in its admit slice).
+                tr.begin(self._ev_submit)
+                if trace_id is None:
+                    tr.flow_start(self._ev_flow, req.trace_id)
+                else:
+                    tr.flow_step(self._ev_flow, req.trace_id)
+                tr.end(self._ev_submit)
+            tr.async_begin(self._ev_req_queued, req.trace_id)
+            tr.counter(self._ev_queue, len(self.scheduler.queue))
+        elif self._flow:
+            tr.instant(self._ev_shed, len(self.scheduler.queue))
         return req
 
     def _can_admit(self, req: Request) -> bool:
@@ -744,7 +774,10 @@ class Engine:
             kvc.fork_blocks(self.alloc, blocks)
         n_fresh = need - len(blocks)
         if not self.alloc.can_reserve(n_fresh):
-            self.prefix_cache.evict(n_fresh - self.alloc.available)
+            shortfall = n_fresh - self.alloc.available
+            if self._flow:
+                self.tracer.instant(self._ev_evict, shortfall)
+            self.prefix_cache.evict(shortfall)
             if not self.alloc.can_reserve(n_fresh):
                 if blocks:
                     self.alloc.free(blocks)     # un-fork: admission refused
@@ -758,8 +791,8 @@ class Engine:
         for slot, req in self.scheduler.admit(self._can_admit):
             # Request lifecycle track: the queued span ends here, the prefill
             # span opens (closed on the prompt-complete prefill chunk).
-            self.tracer.async_end(self._ev_req_queued, req.rid)
-            self.tracer.async_begin(self._ev_req_prefill, req.rid)
+            self.tracer.async_end(self._ev_req_queued, req.trace_id)
+            self.tracer.async_begin(self._ev_req_prefill, req.trace_id)
             blocks, ptoks, n_fresh = self._prefix_match.pop(
                 req.rid, ((), 0, None))
             n = (n_fresh if n_fresh is not None else
@@ -773,6 +806,8 @@ class Engine:
                 if blocks:
                     self.metrics.prefix_hits += 1
                     self.metrics.prefix_hit_tokens += ptoks
+                    if self._flow:
+                        self.tracer.instant(self._ev_prefix_hit, ptoks)
                     seeds.append((slot, list(blocks), ptoks))
             # A *refilled* slot needs its recurrent state and length zeroed
             # (the rest of the batch keeps decoding undisturbed); a
@@ -829,7 +864,12 @@ class Engine:
             queue_steps=(req.first_token_step or self._step) - req.submit_step,
             cached_tokens=req.cached_tokens,
         ), self._request_log)
-        self.tracer.async_end(self._ev_req_decode, req.rid)
+        if self._flow:
+            # Lands inside the enclosing tick slice (_record_token runs
+            # after the phase span closed, before the tick ends) — the
+            # arrowhead points at the tick that finished the request.
+            self.tracer.flow_end(self._ev_flow, req.trace_id)
+        self.tracer.async_end(self._ev_req_decode, req.trace_id)
 
     def _record_token(self, req: Request, token: int) -> None:
         if req.first_token_step is None:
@@ -888,6 +928,9 @@ class Engine:
         # un-jitted XLA copy (~100-700µs each on CPU — real money against a
         # ~1ms verify step).
         self.tracer.begin(self._ev_verify)
+        if self._flow:
+            for r in reqs:
+                self.tracer.flow_step(self._ev_flow, r.trace_id)
         greedy, n_new, self.state = self._run_compiled(
             f"verify{width}", self._verify_fn, self.params, self.state,
             tokens, active, limits, eos)
@@ -947,6 +990,8 @@ class Engine:
             tokens = jnp.asarray(
                 req.prompt[None, req.prefilled:req.prefilled + chunk])
             tr.begin(self._ev_prefill)
+            if self._flow:
+                tr.flow_step(self._ev_flow, req.trace_id)
             t_pre = time.monotonic()
             logits, self.state = self._run_compiled(
                 f"chunk{chunk}", self._chunk_fn,
@@ -965,8 +1010,8 @@ class Engine:
             if req.phase is Phase.DECODE:
                 # Prompt complete: close the request's prefill span, open its
                 # decode span (closed in _finish).
-                tr.async_end(self._ev_req_prefill, req.rid)
-                tr.async_begin(self._ev_req_decode, req.rid)
+                tr.async_end(self._ev_req_prefill, req.trace_id)
+                tr.async_begin(self._ev_req_decode, req.trace_id)
             if req.phase is Phase.DECODE and self.prefix_cache is not None:
                 # Prompt fully in the pool: publish its full blocks for
                 # later requests (the cache takes its own refs; the partial
@@ -1000,6 +1045,9 @@ class Engine:
             active[[r.slot for r in reqs]] = True
             t_dec = time.monotonic()
             tr.begin(self._ev_decode)
+            if self._flow:
+                for r in reqs:
+                    tr.flow_step(self._ev_flow, r.trace_id)
             logits, self.state = self._run_compiled(
                 "decode", self._decode_fn, self.params, self.state, tokens,
                 active)

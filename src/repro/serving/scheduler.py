@@ -46,6 +46,9 @@ class Request:
     # -- filled in by the scheduler/engine --
     phase: Phase = Phase.QUEUED
     slot: int = -1
+    trace_id: int = -1                 # distributed-trace flow id: minted
+                                       # by the router (cluster-wide) or the
+                                       # engine (pid-namespaced) at submit
     prefilled: int = 0                 # prompt tokens already in the cache
     cached_tokens: int = 0             # prompt tokens covered by a shared
                                        # KV prefix at admission (prefill

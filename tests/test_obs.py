@@ -16,9 +16,11 @@ from repro.obs import (
     NULL_TRACER,
     Tracer,
     chrome_trace_events,
+    nearest_rank_index,
     trace_document,
     write_chrome_trace,
 )
+from repro import obs
 from repro.serving.engine import Engine, percentile
 
 ARCH = "gemma3-1b"
@@ -79,6 +81,43 @@ def test_span_contextmanager_balances_on_exception():
 # ---------------------------------------------------------------------------
 # histograms
 # ---------------------------------------------------------------------------
+
+
+def test_percentile_helper_is_the_shared_definition():
+    """One nearest-rank definition across the repo: the engine and the
+    serving package both re-export repro.obs.percentile (the PR-9 dedupe),
+    and its rank math matches the index helper the histogram uses."""
+    from repro import serving
+    from repro.serving import engine as engine_mod
+
+    assert engine_mod.percentile is obs.percentile
+    assert serving.percentile is obs.percentile      # lazy re-export
+    vals = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert obs.percentile(vals, 50) == 3.0           # nearest rank, not interp
+    assert obs.percentile(vals, 100) == 5.0
+    assert obs.percentile(vals, 0) == 1.0
+    assert obs.percentile([], 95) == 0.0
+    assert obs.percentile(iter(vals), 95) == 5.0     # any iterable
+    assert nearest_rank_index(50, 5) == 2
+    assert nearest_rank_index(0, 5) == 0             # clamped low
+    assert nearest_rank_index(100, 5) == 4
+    assert nearest_rank_index(99, 1) == 0
+
+
+def test_histogram_count_above():
+    h = Histogram()
+    assert h.count_above(1.0) == 0
+    for v in (0.5, 0.5, 2.0, 3.0, 100.0):
+        h.add(v)
+    # bucket representatives keep small-vs-large separable at rel_error
+    assert h.count_above(1.0) == 3
+    assert h.count_above(0.01) == 5
+    assert h.count_above(1e9) == 0
+    # underflow bucket represents as h.min (never above a real threshold)
+    h2 = Histogram()
+    h2.add(0.0)
+    h2.add(5.0)
+    assert h2.count_above(1.0) == 1
 
 
 def test_histogram_empty_and_single_value():
@@ -219,6 +258,99 @@ def test_untraced_engine_records_nothing(traced_run):
     assert chrome_trace_events([eng.tracer]) == []
 
 
+def test_flow_events_connect_each_request(traced_run):
+    """Tentpole acceptance: every finished request is reconstructable by
+    trace id — one connected flow chain (``s`` -> ``t``... -> ``f``) named
+    "req" with ``cat="flow"``, ids namespaced ``(pid << 24) + rid``."""
+    evs = chrome_trace_events([traced_run.tracer])
+    flows = [e for e in evs if e.get("cat") == "flow"]
+    assert flows, "flow-traced run exported no flow events"
+    assert all(e["name"] == "req" for e in flows)
+    want = {(traced_run.tracer.pid << 24) + r.rid
+            for r in traced_run.metrics.requests}
+    by_id = {}
+    for e in flows:
+        by_id.setdefault(e["id"], []).append(e)
+    assert set(by_id) == want
+    for fid, chain in by_id.items():
+        phs = [e["ph"] for e in chain]
+        assert phs[0] == "s" and phs[-1] == "f", (fid, phs)
+        assert set(phs[1:-1]) <= {"t"}, (fid, phs)
+        assert chain[-1]["bp"] == "e"           # bind f to preceding slice
+        ts = [e["ts"] for e in chain]
+        assert ts == sorted(ts)
+
+
+def test_flow_events_bind_to_open_slices(traced_run):
+    """Perfetto draws a flow arrow only when the s/t/f event lands inside a
+    duration slice open on that thread at that ts; replay the stream and
+    require nonzero B/E depth at every flow event."""
+    depth = {}
+    for e in chrome_trace_events([traced_run.tracer]):
+        key = (e.get("pid"), e.get("tid"))
+        if e["ph"] == "B":
+            depth[key] = depth.get(key, 0) + 1
+        elif e["ph"] == "E":
+            depth[key] = depth.get(key, 0) - 1
+        elif e["ph"] in ("s", "t", "f"):
+            assert depth.get(key, 0) > 0, e
+
+
+def test_flow_events_gated_by_trace_flow(traced_run):
+    cfg = configs.get_smoke(ARCH)
+    eng = Engine(cfg, slots=2, max_seq=32, block_size=4, max_chunk=8,
+                 trace=True, trace_flow=False)
+    eng.share_steps_from(traced_run)
+    eng.warmup()
+    eng.submit([1, 2, 3, 4], max_new=3)
+    eng.run()
+    evs = chrome_trace_events([eng.tracer])
+    assert evs                                   # still span-traced
+    assert not [e for e in evs if e["ph"] in ("s", "t", "f", "i")]
+
+
+def test_shed_and_prefix_hit_instants():
+    """Shed decisions and prefix-cache hits surface as annotated instant
+    events ("i", thread-scoped) in the trace."""
+    cfg = configs.get_smoke(ARCH)
+    eng = Engine(cfg, slots=2, max_seq=32, block_size=4, max_chunk=8,
+                 trace=True, prefix_cache=True, max_queue=1)
+    eng.warmup()
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    p1 = np.concatenate([prefix, rng.integers(0, cfg.vocab, size=3)]).astype(np.int32)
+    p2 = np.concatenate([prefix, rng.integers(0, cfg.vocab, size=4)]).astype(np.int32)
+    assert eng.submit(p1, max_new=3) is not None
+    # queue cap 1: a second pre-tick submit must shed (-> "shed" instant)
+    assert eng.submit(p2, max_new=3) is None
+    eng.run()
+    # p1's full blocks are cached at finish; resubmitting p2 hits the prefix
+    assert eng.submit(p2, max_new=3) is not None
+    eng.run()
+    inst = [e for e in chrome_trace_events([eng.tracer]) if e["ph"] == "i"]
+    names = {e["name"] for e in inst}
+    assert {"shed", "prefix_hit"} <= names
+    assert all(e["s"] == "t" for e in inst)
+    hit = [e for e in inst if e["name"] == "prefix_hit"]
+    assert hit[0]["args"]["value"] >= 4          # tokens served from cache
+
+
+def test_cache_evict_instant_under_pool_pressure():
+    cfg = configs.get_smoke(ARCH)
+    eng = Engine(cfg, slots=1, max_seq=16, block_size=4, num_blocks=5,
+                 max_chunk=4, prefix_cache=True, trace=True)
+    eng.warmup()
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab, size=9).astype(np.int32),
+                   max_new=3)
+        eng.run()
+    evs = chrome_trace_events([eng.tracer])
+    evict = [e for e in evs if e["ph"] == "i" and e["name"] == "cache_evict"]
+    assert evict, "pool pressure produced no cache_evict instant"
+    assert evict[0]["args"]["value"] > 0         # blocks short at admission
+
+
 def test_tracing_overhead_under_two_percent(traced_run):
     """The acceptance bar: per-tick tracing cost < 2% of a decode tick.
 
@@ -239,8 +371,9 @@ def test_tracing_overhead_under_two_percent(traced_run):
     m = traced_run.metrics
     tick_s = m.decode_time_s / max(1, m.decode_steps)
     # a plain decode tick records: tick B/E + sched B/E + decode B/E
-    # + 2 KV counters = 8 events (spec ticks add draft/verify spans)
-    events_per_tick = 10
+    # + 2 KV counters = 8 events; per-request flow steps add one per
+    # active slot and spec ticks add draft/verify spans
+    events_per_tick = 14
     overhead = events_per_tick * best_ns * 1e-9 / tick_s
     assert overhead < 0.02, (
         f"tracing costs {overhead:.2%} of a {tick_s * 1e6:.0f}us decode tick "

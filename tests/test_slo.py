@@ -1,0 +1,509 @@
+"""SLO telemetry tests (repro.obs.slo / repro.obs.recorder): multi-window
+burn-rate math over synthetic feeds, escalation/hysteresis state machine,
+--slo spec parsing, cluster-merged evaluation, flight-recorder incident
+bundles and built-in trigger policies, the benchmark compare gate, and an
+end-to-end cluster acceptance run (trace-id flow chains across router and
+replica lanes, forced shed, incident capture)."""
+
+import importlib.util
+import json
+import os
+import types
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.obs import (
+    BREACH,
+    OK,
+    WARN,
+    FlightRecorder,
+    Histogram,
+    NULL_TRACER,
+    SloMonitor,
+    SloTarget,
+    Tracer,
+    parse_slo_spec,
+)
+
+ARCH = "gemma3-1b"
+
+
+# ---------------------------------------------------------------------------
+# burn-rate math + state machine (synthetic feeds, no engine)
+# ---------------------------------------------------------------------------
+
+
+def _ttft_target(threshold=0.1, budget=0.05):
+    return SloTarget(name="ttft_p95", kind="histogram", source="ttft",
+                     threshold=threshold, budget=budget)
+
+
+def _observe(mon, h, n_good=0, n_bad=0):
+    """Extend the cumulative histogram feed, then evaluate one step."""
+    for _ in range(n_good):
+        h.add(0.01)
+    for _ in range(n_bad):
+        h.add(1.0)
+    return mon.observe({"ttft": h})
+
+
+def test_burn_crossing_warn_breach_and_hysteresis():
+    """The canonical trajectory: clean -> bad burst -> clean again.  Burn
+    rates are exact (windows are observe() counts, feeds are synthetic), so
+    every state on the way up and down is asserted."""
+    mon = SloMonitor([_ttft_target()])        # short=1 long=4, clear_after=2
+    h = Histogram()
+
+    r = _observe(mon, h, n_good=100)
+    t = r.targets[0]
+    assert (t.state, t.burn_short, t.burn_long) == (OK, 0.0, 0.0)
+    assert r.state == OK and not r.transitions
+
+    # burst: 20% bad in the step -> short burn 4.0; 10% bad overall -> long
+    # burn 2.0.  Both windows at breach_burn: immediate escalation.
+    r = _observe(mon, h, n_good=80, n_bad=20)
+    t = r.targets[0]
+    assert t.state == BREACH and t.transitioned and t.prev_state == OK
+    assert t.burn_short == pytest.approx(4.0)
+    assert t.burn_long == pytest.approx(2.0)
+    assert r.breaches and r.state == BREACH
+    assert t.bad_total == 20 and t.total == 200
+    assert "breach" in r.summary()
+
+    # clean step: level drops to WARN (long window still burns 1.33) but
+    # hysteresis holds BREACH for clear_after=2 evaluations
+    r = _observe(mon, h, n_good=100)
+    t = r.targets[0]
+    assert t.state == BREACH and not t.transitioned
+    assert t.burn_short == 0.0
+    assert t.burn_long == pytest.approx(20 / 300 / 0.05)
+
+    # second calm evaluation: clears — to WARN, since the long window still
+    # spends budget exactly at rate 1.0
+    r = _observe(mon, h, n_good=100)
+    t = r.targets[0]
+    assert t.state == WARN and t.transitioned and t.prev_state == BREACH
+    assert t.burn_long == pytest.approx(1.0)
+
+    _observe(mon, h, n_good=100)              # long window 1.0: WARN holds
+    r = _observe(mon, h, n_good=100)          # bad burst slides out: calm 1
+    assert r.targets[0].state == WARN
+    r = _observe(mon, h, n_good=100)          # calm 2: clears to OK
+    t = r.targets[0]
+    assert t.state == OK and t.transitioned and t.prev_state == WARN
+    assert mon.state == OK
+
+
+def test_breach_requires_both_windows():
+    """A short-window spike over a calm long window must not page: that is
+    the whole point of multi-window burn."""
+    mon = SloMonitor([_ttft_target()])
+    h = Histogram()
+    _observe(mon, h, n_good=400)
+    # 20% bad in this step (short burn 4.0) but only ~1% bad overall
+    r = _observe(mon, h, n_good=16, n_bad=4)
+    t = r.targets[0]
+    assert t.burn_short == pytest.approx(4.0)
+    assert t.burn_long < 1.0
+    assert t.state == OK
+
+
+def test_ratio_target_and_idle_window():
+    mon = SloMonitor([SloTarget(name="shed_rate", kind="ratio",
+                                source="shed/offered", threshold=0.05,
+                                budget=0.05)])
+    r = mon.observe({"shed": 0, "offered": 100})
+    assert r.targets[0].state == OK
+    r = mon.observe({"shed": 20, "offered": 200})
+    t = r.targets[0]
+    assert t.burn_short == pytest.approx(0.2 / 0.05)
+    assert t.burn_long == pytest.approx(0.1 / 0.05)
+    assert t.state == BREACH
+    # idle window (counters unchanged) spends no budget: level drops, the
+    # hysteresis holds the state
+    r = mon.observe({"shed": 20, "offered": 200})
+    t = r.targets[0]
+    assert t.burn_short == 0.0 and t.state == BREACH and not t.transitioned
+
+
+def test_floor_target_gauge_mean_and_startup_grace():
+    mon = SloMonitor([SloTarget(name="mfu_floor", kind="floor",
+                                source="mfu_decode", threshold=0.5)])
+    r = mon.observe({"mfu_decode": 1.0})
+    assert r.targets[0].state == OK
+    assert r.targets[0].burn_short == pytest.approx(0.5)
+    # gauge collapses: short burn jumps at once, long mean degrades slowly
+    r = mon.observe({"mfu_decode": 0.1})
+    t = r.targets[0]
+    assert t.burn_short == pytest.approx(5.0)
+    assert t.burn_long == pytest.approx(0.5 / 0.55)
+    assert t.state == OK                       # long window still healthy
+    mon.observe({"mfu_decode": 0.1})
+    r = mon.observe({"mfu_decode": 0.1})
+    assert r.targets[0].state == WARN          # long mean now 0.325
+    r = mon.observe({"mfu_decode": 0.1})       # window all-collapsed
+    assert r.targets[0].state == BREACH
+    # zero gauge = no signal yet, never an alarm (serve-loop startup)
+    calm = SloMonitor([SloTarget(name="mfu_floor", kind="floor",
+                                 source="mfu_decode", threshold=0.5)])
+    r = calm.observe({"mfu_decode": 0.0})
+    assert r.targets[0].state == OK and r.targets[0].burn_short == 0.0
+
+
+def test_missing_or_empty_sources_burn_nothing():
+    mon = SloMonitor([_ttft_target(),
+                      SloTarget(name="shed_rate", kind="ratio",
+                                source="shed/offered", threshold=0.05,
+                                budget=0.05)])
+    r = mon.observe({})                        # nothing wired yet
+    assert r.state == OK
+    r = mon.observe({"ttft": Histogram(), "shed": 0, "offered": 0})
+    assert r.state == OK
+
+
+def test_report_worst_of_and_dict_shape():
+    mon = SloMonitor([_ttft_target(),
+                      SloTarget(name="mfu_floor", kind="floor",
+                                source="mfu_decode", threshold=1e-9)])
+    h = Histogram()
+    for _ in range(10):
+        h.add(1.0)                             # 100% bad
+    r = mon.observe({"ttft": h, "mfu_decode": 1.0})
+    assert [t.state for t in r.targets] == [BREACH, OK]
+    assert r.state == BREACH                   # worst-of
+    d = json.loads(json.dumps(r.as_dict()))
+    assert d["state"] == BREACH
+    assert d["targets"][0]["transitioned"] is True
+    assert SloMonitor([]).observe({}).state == OK
+
+
+def test_target_and_monitor_validation():
+    with pytest.raises(ValueError, match="unknown SLO kind"):
+        SloTarget(name="x", kind="gauge", source="y", threshold=1.0)
+    with pytest.raises(ValueError, match="budget"):
+        SloTarget(name="x", kind="histogram", source="y", threshold=1.0,
+                  budget=0.0)
+    with pytest.raises(ValueError, match="num/den"):
+        SloTarget(name="x", kind="ratio", source="shed", threshold=0.05)
+    targets = [_ttft_target()]
+    with pytest.raises(ValueError):
+        SloMonitor(targets, short_window=0)
+    with pytest.raises(ValueError):
+        SloMonitor(targets, short_window=4, long_window=2)
+    with pytest.raises(ValueError):
+        SloMonitor(targets, clear_after=0)
+
+
+def test_parse_slo_spec():
+    by = {t.name: t for t in parse_slo_spec(
+        "ttft_p95=0.25, latency_p99=1.0, shed_rate=0.05, mfu_floor=1e-6")}
+    t = by["ttft_p95"]
+    assert (t.kind, t.source, t.threshold) == ("histogram", "ttft", 0.25)
+    assert t.budget == pytest.approx(0.05)
+    assert by["latency_p99"].budget == pytest.approx(0.01)
+    # budgets parse to clean decimals so burn==breach_burn compares exact
+    assert by["ttft_p95"].budget == 0.05
+    s = by["shed_rate"]
+    assert (s.kind, s.source, s.budget) == ("ratio", "shed/offered", 0.05)
+    f = by["mfu_floor"]
+    assert (f.kind, f.source, f.threshold) == ("floor", "mfu_decode", 1e-6)
+    for bad in ("", "   ", "nope=1", "ttft_p95", "ttft_p95=fast",
+                "ttft_pxx=1", "ttft_p0=1", "ttft_p100=1", "queue_p95=1"):
+        with pytest.raises(ValueError):
+            parse_slo_spec(bad)
+
+
+def test_cluster_merged_histogram_burns_like_concatenated_feed():
+    """The cluster path merges per-replica histograms losslessly, so the
+    merged monitor must report exactly the burn of one monitor fed the
+    concatenated stream."""
+    rng = np.random.default_rng(0)
+    a_vals = list(rng.lognormal(-3, 1, 120)) + [1.0] * 9
+    b_vals = list(rng.lognormal(-3, 1, 80)) + [1.0] * 13
+    a, b, one = Histogram(), Histogram(), Histogram()
+    for v in a_vals:
+        a.add(float(v))
+        one.add(float(v))
+    for v in b_vals:
+        b.add(float(v))
+        one.add(float(v))
+    a.merge(b)
+    m_merged = SloMonitor([_ttft_target(threshold=0.5)])
+    m_single = SloMonitor([_ttft_target(threshold=0.5)])
+    rm = m_merged.observe({"ttft": a}).targets[0]
+    rs = m_single.observe({"ttft": one}).targets[0]
+    assert rm.state == rs.state
+    assert rm.burn_short == rs.burn_short and rm.burn_long == rs.burn_long
+    assert (rm.bad_total, rm.total) == (rs.bad_total, rs.total)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_bundle_contents(tmp_path):
+    tr = Tracer(capacity=64, name="unit", pid=7)
+    c = tr.intern("work")
+    tr.begin(c)
+    tr.flow_start(tr.intern("req"), 3)
+    tr.end(c)
+    rec = FlightRecorder(str(tmp_path), tracers=[tr, NULL_TRACER],
+                         metadata={"arch": "unit"})
+    rec.add_source("counts", lambda: {"x": 1})
+    rec.add_source("boom", lambda: 1 / 0)
+    path = rec.trigger("unit test: weird/reason!", extra={"k": "v"})
+    assert os.path.basename(path) == "incident-001-unit-test-weird-reason.json"
+    with open(path) as f:
+        b = json.load(f)                       # self-contained valid JSON
+    assert b["trigger"]["reason"] == "unit test: weird/reason!"
+    assert b["trigger"]["seq"] == 1 and b["trigger"]["context"] == {"k": "v"}
+    assert b["metadata"] == {"arch": "unit"}
+    [lane] = b["tracers"]                      # NULL_TRACER never registers
+    assert (lane["name"], lane["pid"], lane["live_read"]) == ("unit", 7, True)
+    assert [e["ph"] for e in lane["events"]] == ["B", "s", "E"]
+    assert lane["recorded"] == 3 and lane["dropped"] == 0
+    assert b["sources"]["counts"] == {"x": 1}
+    assert "ZeroDivisionError" in b["sources"]["boom"]["error"]
+    assert rec.incidents == [path]
+
+
+def test_recorder_caps_events_to_newest(tmp_path):
+    tr = Tracer(capacity=256, name="t")
+    c = tr.intern("v")
+    for i in range(100):
+        tr.counter(c, float(i))
+    rec = FlightRecorder(str(tmp_path), tracers=[tr], max_events=10)
+    with open(rec.trigger("cap")) as f:
+        evs = json.load(f)["tracers"][0]["events"]
+    assert [e["value"] for e in evs] == [float(i) for i in range(90, 100)]
+
+
+def test_recorder_rate_limits_per_reason(tmp_path):
+    rec = FlightRecorder(str(tmp_path), min_interval_s=60.0)
+    assert rec.trigger("shed") is not None
+    assert rec.trigger("shed") is None         # same reason, inside window
+    assert rec.suppressed == 1
+    other = rec.trigger("allocator-pressure")  # different reason passes
+    assert other is not None and "incident-002" in other
+    assert len(rec.incidents) == 2
+
+
+def test_record_breaches_only_on_transition(tmp_path):
+    mon = SloMonitor([_ttft_target()])
+    h = Histogram()
+    _observe(mon, h, n_good=100)
+    report = _observe(mon, h, n_bad=100)       # transition into breach
+    assert FlightRecorder.is_breach(report)
+    rec = FlightRecorder(str(tmp_path))
+    paths = rec.record_breaches(report)
+    assert len(paths) == 1
+    with open(paths[0]) as f:
+        b = json.load(f)
+    assert b["trigger"]["reason"] == "slo-breach-ttft_p95"
+    ctx = b["trigger"]["context"]
+    assert ctx["prev_state"] == OK and ctx["burn_short"] >= 2.0
+    assert ctx["report"]["state"] == BREACH
+    # still breaching, but no transition: no new bundle
+    report = _observe(mon, h, n_bad=100)
+    assert report.state == BREACH and rec.record_breaches(report) == []
+
+
+def _fake_engine(free, in_use, drafted=0, accepted=0):
+    alloc = types.SimpleNamespace(stats=lambda: {
+        "in_use": in_use, "reserved": 0, "free": free})
+    metrics = types.SimpleNamespace(
+        spec_draft_tokens=drafted, spec_accepted_tokens=accepted,
+        acceptance_rate=accepted / max(1, drafted))
+    return types.SimpleNamespace(alloc=alloc, metrics=metrics)
+
+
+def test_check_engine_pressure_triggers(tmp_path):
+    rec = FlightRecorder(str(tmp_path))
+    assert rec.check_engine(_fake_engine(free=50, in_use=50)) == []
+    paths = rec.check_engine(_fake_engine(free=2, in_use=98))
+    assert len(paths) == 1 and "allocator-pressure" in paths[0]
+    with open(paths[0]) as f:
+        assert json.load(f)["trigger"]["context"]["free"] == 2
+    paths = rec.check_engine(
+        _fake_engine(free=50, in_use=50, drafted=100, accepted=5))
+    assert len(paths) == 1 and "spec-acceptance-collapse" in paths[0]
+    # below min_drafted: too little evidence to call a collapse
+    assert rec.check_engine(
+        _fake_engine(free=50, in_use=50, drafted=10, accepted=0)) == []
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/compare.py: the CI regression gate
+# ---------------------------------------------------------------------------
+
+_COMPARE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "benchmarks", "compare.py")
+_spec = importlib.util.spec_from_file_location("bench_compare", _COMPARE_PATH)
+bench_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_compare)
+
+
+def _report(tmp_path, fname, rows, errors=None):
+    doc = {"sections": {"s": {"rows": rows, "seconds": 1.0}}}
+    if errors:
+        doc["errors"] = errors
+    p = tmp_path / fname
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def _gate(tmp_path, base_rows, head_rows, errors=None):
+    base = _report(tmp_path, "base.json", base_rows)
+    head = _report(tmp_path, "head.json", head_rows, errors=errors)
+    return bench_compare.main([base, head, "--fail-on-change"])
+
+
+def test_compare_gate_fails_on_regression(tmp_path):
+    rows = [{"name": "s/count", "value": 100, "derived": ""}]
+    assert _gate(tmp_path, rows, rows) == 0
+    worse = [{"name": "s/count", "value": 200, "derived": ""}]
+    assert _gate(tmp_path, rows, worse) == 1
+
+
+def test_compare_gate_exempts_informational_rows(tmp_path):
+    base = [{"name": "obs/decode_overhead_pct", "value": 0.5, "derived": ""},
+            {"name": "x/flaky", "value": 1.0,
+             "derived": "< 2 (informational)"},
+            {"name": "c/bar", "value": "informational", "derived": ""}]
+    head = [{"name": "obs/decode_overhead_pct", "value": -3.0, "derived": ""},
+            {"name": "x/flaky", "value": 9.0,
+             "derived": "< 2 (informational)"},
+            {"name": "c/bar", "value": "informational", "derived": ""}]
+    assert _gate(tmp_path, base, head) == 0
+
+
+def test_compare_gate_wide_tolerance_for_wall_clock_rows(tmp_path):
+    base = [{"name": "s/tick_us", "value": 10.0, "derived": ""}]
+    assert _gate(tmp_path, base,
+                 [{"name": "s/tick_us", "value": 25.0, "derived": ""}]) == 0
+    assert _gate(tmp_path, base,
+                 [{"name": "s/tick_us", "value": 50.0, "derived": ""}]) == 1
+
+
+def test_compare_gate_removed_gates_added_does_not(tmp_path):
+    rows = [{"name": "s/count", "value": 100, "derived": ""}]
+    grown = rows + [{"name": "s/new_row", "value": 1, "derived": ""}]
+    assert _gate(tmp_path, rows, grown) == 0   # new coverage never gates
+    assert _gate(tmp_path, grown, rows) == 1   # vanished row always gates
+
+
+def test_compare_gate_fails_on_head_section_errors(tmp_path):
+    rows = [{"name": "s/count", "value": 100, "derived": ""}]
+    assert _gate(tmp_path, rows, rows, errors={"s": "boom"}) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: cluster trace reconstruction + forced shed + incident capture
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_trace_slo_and_incidents_end_to_end(tmp_path):
+    """The ISSUE acceptance run: 2 traced replicas with prefix cache and
+    speculation on, a traced router with a tight in-flight window.  Every
+    finished request must be reconstructable by trace id via connected
+    flow events (s on the router lane, f on a replica lane); the forced
+    shed must leave instants, an SLO breach, and an incident bundle."""
+    from repro import cluster
+    from repro.cluster import metrics as cmetrics
+
+    cfg = configs.get_smoke(ARCH)
+    pool = cluster.ReplicaPool(cfg, 2, slots=2, max_seq=48, block_size=4,
+                               max_chunk=8, trace=True, prefix_cache=True,
+                               speculative=True)
+    pool.warmup()
+    router_tracer = Tracer(name="router", pid=len(pool))
+    rec = FlightRecorder(str(tmp_path / "incidents"),
+                         tracers=[router_tracer],
+                         metadata={"arch": cfg.name})
+    for i, e in enumerate(pool.engines):
+        rec.attach_engine(e, name=f"replica{i}")
+    router = cluster.Router(pool, policy="round-robin", max_pending=3,
+                            async_dispatch=False, tracer=router_tracer,
+                            recorder=rec)
+
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    handles = []
+    for k in range(8):
+        tail = rng.integers(0, cfg.vocab, size=int(rng.integers(2, 6)))
+        h = router.submit(np.concatenate([prefix, tail]).astype(np.int32),
+                          max_new=4)
+        if h is not None:
+            handles.append(h)
+        router.dispatch_sync()
+        if k == 3:
+            pool.run_sync(max_ticks=5000)     # drain the first wave
+    router.dispatch_sync()
+    pool.run_sync(max_ticks=5000)
+
+    # the tight window shed some of the burst, the rest finished
+    assert router.shed >= 1 and len(handles) == 8 - router.shed
+    for h in handles:
+        assert len(h.result(timeout=0)) == 4
+        assert h.trace_id == h.crid           # router-minted, cluster-unique
+
+    doc = pool.export_trace(str(tmp_path / "trace.json"),
+                            extra_tracers=[router_tracer])
+    evs = doc["traceEvents"]
+    assert {e["pid"] for e in evs} >= {0, 1, len(pool)}
+
+    # every finished request: one connected flow chain starting on the
+    # router lane and finishing on the replica lane that served it
+    flows_by_id = {}
+    for e in evs:
+        if e.get("cat") == "flow":
+            flows_by_id.setdefault(e["id"], []).append(e)
+    assert set(flows_by_id) == {h.trace_id for h in handles}
+    finish_pids = set()
+    for h in handles:
+        # the export concatenates lanes; wall-clock order reconstructs the
+        # cross-lane chain (all tracers share one perf_counter_ns clock)
+        chain = sorted(flows_by_id[h.trace_id], key=lambda e: e["ts"])
+        assert chain[0]["ph"] == "s" and chain[0]["pid"] == len(pool)
+        assert chain[1]["ph"] == "t" and chain[1]["pid"] == len(pool)  # route
+        assert chain[-1]["ph"] == "f" and chain[-1]["pid"] in (0, 1)
+        assert {e["ph"] for e in chain[1:-1]} == {"t"}
+        finish_pids.add(chain[-1]["pid"])
+    assert finish_pids == {0, 1}              # round-robin used both lanes
+
+    # shed decisions left instants on the router lane, one per shed
+    sheds = [e for e in evs if e["ph"] == "i" and e["name"] == "shed"
+             and e["pid"] == len(pool)]
+    assert len(sheds) == router.shed
+
+    # shared prefix across the waves: at least one replica served from cache
+    assert sum(e.metrics.prefix_hits for e in pool.engines) >= 1
+
+    # incident bundles: the router shed trigger fired with full evidence
+    assert rec.incidents
+    with open(rec.incidents[0]) as f:
+        b = json.load(f)
+    assert b["trigger"]["reason"] == "shed"
+    assert b["trigger"]["context"]["max_pending"] == 3
+    lanes = {t["name"] for t in b["tracers"]}
+    assert "router" in lanes and len(lanes) == 3
+    assert "replica0.metrics" in b["sources"]
+    assert "replica1.scheduler" in b["sources"]
+    assert "in_use" in b["sources"]["replica0.allocator"]
+
+    # cluster-aggregated SLO: shed rate breaches a tight objective and the
+    # recorder captures the breach transition
+    m = cmetrics.aggregate(pool, router, elapsed_s=1.0)
+    snap = cluster.slo_snapshot(m)
+    mon = SloMonitor(parse_slo_spec(
+        "ttft_p95=60.0, latency_p95=60.0, shed_rate=0.01, mfu_floor=1e-12"))
+    report = mon.observe(snap)
+    by = {t.name: t for t in report.targets}
+    assert by["ttft_p95"].state == OK and by["mfu_floor"].state == OK
+    assert by["shed_rate"].state == BREACH
+    paths = rec.record_breaches(report)
+    assert len(paths) == 1 and "slo-breach-shed_rate" in paths[0]
+    pool.stop()
