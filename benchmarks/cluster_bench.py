@@ -103,7 +103,7 @@ def _mixed_rows(cfg, params, max_seq):
     pool.start()
 
     def single_run():
-        cluster.replay(trace, lambda p, m: eng.submit(p, m))
+        cluster.replay(trace, eng.submit)
         t0 = time.perf_counter()
         eng.run()
         return time.perf_counter() - t0
@@ -168,7 +168,7 @@ def _prefix_rows(cfg, params, max_seq, warm_engine):
                      block_size=16, max_chunk=32, prefix_cache=prefix_cache)
         eng.share_steps_from(warm_engine)
         eng.warmup()
-        cluster.replay(trace, lambda p, m: eng.submit(p, m))
+        cluster.replay(trace, eng.submit)
         eng.run()
         eng.alloc.check()
         if eng.prefix_cache is not None:

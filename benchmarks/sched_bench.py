@@ -1,0 +1,137 @@
+"""Scheduler benchmark: interactive p95 latency under batch load, FIFO vs
+class-aware preemption (EXPERIMENTS.md §Scheduling).
+
+Paper artifact: none directly — this measures the serving-path analogue of
+the paper's control argument: a lightweight programmable scheduler in front
+of a fixed datapath decides *which* work the datapath runs, and that
+decision (not the datapath) sets tail latency for the latency-class.
+
+Scenario (deterministic, tick-driven): one decode slot, a backlog of
+``batch``-class requests with long generations occupying it, and
+``interactive``-class arrivals every few ticks wanting a short generation.
+Without preemption (``preempt=False``) the interactive request waits for
+the batch resident's remaining decode — pure head-of-line blocking.  With
+``preempt=True`` the engine swaps the batch victim's KV blocks to host
+memory, serves the interactive request immediately, then restores the
+victim (token-identical; tests/test_scheduling.py proves the round-trip).
+
+Output rows (CSV via benchmarks/run.py):
+  sched/interactive_p95_ms_fifo     interactive-class p95 latency, FIFO
+  sched/interactive_p95_ms_preempt  same arrivals, preemption on (derived =
+                                    the FIFO row: the delta that matters)
+  sched/interactive_p95_speedup     FIFO / preempt p95 ratio (derived = 1.0,
+                                    the acceptance bar: preemption must not
+                                    lose)
+  sched/preempt_swap_ms             mean swap-out + restore wall clock per
+                                    preemption (the price of the ratio)
+  sched/preemptions                 victims swapped in the preempt run
+
+Both engines share one warmed step cache (``share_steps_from``), and the
+two modes run interleaved best-of-N so host load spikes hit both alike.
+Latencies come from the engine's own submit->finish RequestMetrics.
+
+Expected runtime: ~1 min on CPU (dominated by the single warmup compile).
+REPRO_BENCH_FAST=1 (or `benchmarks/run.py --fast` / `make bench-smoke`)
+shrinks generations/arrivals to a smoke run of the same code paths.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro import configs
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec
+from repro.tuning import env_truthy
+
+FAST = env_truthy(os.environ.get("REPRO_BENCH_FAST"))
+
+ARCH = "gemma3-1b"
+PROMPT_LEN = 8
+BATCH_GEN = 12 if FAST else 40     # batch-class generation length
+N_BATCH = 2                        # backlog depth keeping the slot busy
+INT_GEN = 4                        # interactive-class generation length
+N_INT = 3 if FAST else 8           # interactive arrivals per run
+GAP_TICKS = 6 if FAST else 8       # ticks between interactive arrivals
+WARM_TICKS = 2                     # batch decode ticks before first arrival
+ITERS = 2 if FAST else 3
+BLOCK_SIZE = 4
+
+
+def _engine(cfg, warm, *, preempt):
+    eng = Engine(cfg, slots=1, max_seq=PROMPT_LEN + BATCH_GEN + 1,
+                 block_size=BLOCK_SIZE, preempt=preempt)
+    if warm is not None:
+        eng.share_steps_from(warm)
+    return eng
+
+
+def _scenario(eng, rng):
+    """Batch backlog + periodic interactive arrivals; returns the
+    interactive-class latencies (seconds) plus swap accounting."""
+    batch = [rng.integers(0, eng.cfg.vocab, size=PROMPT_LEN).astype(np.int32)
+             for _ in range(N_BATCH)]
+    inter = [rng.integers(0, eng.cfg.vocab, size=PROMPT_LEN).astype(np.int32)
+             for _ in range(N_INT)]
+    for p in batch:
+        eng.submit(RequestSpec(prompt=p, max_new=BATCH_GEN,
+                               priority="batch", tenant="bulk"))
+    for _ in range(WARM_TICKS):
+        eng.tick()
+    for p in inter:
+        eng.submit(RequestSpec(prompt=p, max_new=INT_GEN,
+                               priority="interactive", tenant="live"))
+        for _ in range(GAP_TICKS):
+            eng.tick()
+    eng.run()
+    lats = [r.latency_s for r in eng.metrics.requests
+            if r.priority == "interactive"]
+    assert len(lats) == N_INT, "scenario must finish every interactive request"
+    return (float(np.percentile(lats, 95)),
+            eng.metrics.preemptions, eng.metrics.swap_time_s)
+
+
+def run():
+    cfg = configs.get_smoke(ARCH)
+    warm = _engine(cfg, None, preempt=True)
+    warm.warmup()
+
+    fifo_p95 = pre_p95 = float("inf")
+    preemptions, swap_s = 0, 0.0
+    for i in range(ITERS):
+        # fresh engines per iteration (state + metrics reset), shared steps;
+        # interleaved so a host load spike degrades both modes alike
+        f, _, _ = _scenario(_engine(cfg, warm, preempt=False),
+                            np.random.default_rng(i))
+        p, n_pre, t_swap = _scenario(_engine(cfg, warm, preempt=True),
+                                     np.random.default_rng(i))
+        fifo_p95, pre_p95 = min(fifo_p95, f), min(pre_p95, p)
+        if n_pre:                      # keep one run's swap accounting
+            preemptions, swap_s = n_pre, t_swap
+
+    swap_ms = swap_s * 1e3 / preemptions if preemptions else 0.0
+    return [
+        {"name": "sched/interactive_p95_ms_fifo",
+         "value": round(fifo_p95 * 1e3, 1), "derived": ""},
+        {"name": "sched/interactive_p95_ms_preempt",
+         "value": round(pre_p95 * 1e3, 1), "derived": round(fifo_p95 * 1e3, 1)},
+        {"name": "sched/interactive_p95_speedup",
+         "value": round(fifo_p95 / pre_p95, 2) if pre_p95 else "",
+         "derived": 1.0},
+        {"name": "sched/preempt_swap_ms",
+         "value": round(swap_ms, 2), "derived": "informational"},
+        {"name": "sched/preemptions",
+         "value": preemptions, "derived": ""},
+    ]
+
+
+def rows():
+    return run()
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for r in rows():
+        print(f"{r['name']},{r['value']},{r['derived']}")

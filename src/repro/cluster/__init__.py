@@ -27,6 +27,7 @@ _LAZY = {
     "ReplicaPool": ("repro.cluster.replica", "ReplicaPool"),
     "ReplicaView": ("repro.cluster.replica", "ReplicaView"),
     "Router": ("repro.cluster.router", "Router"),
+    "TenantStats": ("repro.cluster.router", "TenantStats"),
     "Trace": ("repro.cluster.traffic", "Trace"),
     "TraceItem": ("repro.cluster.traffic", "TraceItem"),
     "TrafficConfig": ("repro.cluster.traffic", "TrafficConfig"),

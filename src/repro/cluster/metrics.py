@@ -22,7 +22,7 @@ the same way (repro.obs.mfu.MfuMeter.merged).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.obs import Histogram, MfuMeter, percentile
 
@@ -33,6 +33,10 @@ class ClusterMetrics:
     requests: int = 0             # finished
     offered: int = 0              # submitted to the router (incl. shed)
     shed: int = 0
+    shed_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    preemptions: int = 0          # KV swap-outs across all engines
+    swap_time_s: float = 0.0      # host<->device KV swap wall time
+    tenants: Dict[str, dict] = dataclasses.field(default_factory=dict)
     elapsed_s: float = 0.0        # caller-timed serving window
     decode_tokens: int = 0
     prefill_tokens: int = 0
@@ -87,6 +91,14 @@ class ClusterMetrics:
         if self.prefix_lookups:
             out += (f" prefix_hit_rate={self.prefix_hit_rate:.0%} "
                     f"({self.prefix_hit_tokens} tok reused)")
+        if self.preemptions:
+            out += (f" preemptions={self.preemptions} "
+                    f"(swap {self.swap_time_s * 1e3:.0f}ms)")
+        if self.tenants:
+            frag = " ".join(
+                f"{t}:{s['admitted']}/{s['offered']}"
+                for t, s in sorted(self.tenants.items()))
+            out += f" tenants=[{frag}]"
         if self.mfu is not None:
             frag = self.mfu.summary()
             if frag:
@@ -101,6 +113,10 @@ class ClusterMetrics:
             "offered": self.offered,
             "shed": self.shed,
             "shed_rate": self.shed_rate,
+            "shed_by_class": dict(self.shed_by_class),
+            "preemptions": self.preemptions,
+            "swap_time_s": self.swap_time_s,
+            "tenants": {t: dict(s) for t, s in self.tenants.items()},
             "elapsed_s": self.elapsed_s,
             "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
@@ -143,6 +159,8 @@ def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
         m.prefix_hit_tokens += e.metrics.prefix_hit_tokens
         m.per_replica_requests.append(e.metrics.finished_requests)
         m.per_replica_occupancy.append(e.metrics.mean_occupancy)
+        m.preemptions += e.metrics.preemptions
+        m.swap_time_s += e.metrics.swap_time_s
         per_req.extend(e.metrics.requests)
         dropped += e.metrics.requests_dropped
         m.ttft_hist.merge(e.metrics.ttft_hist)
@@ -187,6 +205,8 @@ def aggregate(pool, router=None, *, elapsed_s: float = 0.0,
     if router is not None:
         m.offered = router.offered
         m.shed = router.shed + engine_shed
+        m.shed_by_class = dict(router.shed_by_class)
+        m.tenants = router.tenant_stats()
     else:
         m.offered = m.requests + engine_shed
         m.shed = engine_shed

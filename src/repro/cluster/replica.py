@@ -34,19 +34,24 @@ import numpy as np
 
 from repro.obs import Tracer, write_chrome_trace
 from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec, as_spec
 
 
 class ClusterRequest:
-    """Handle for one routed request; resolves when its engine finishes."""
+    """Handle for one routed request; resolves when its engine finishes.
 
-    __slots__ = ("crid", "prompt", "max_new", "replica", "tokens", "shed",
+    Carries the full ``RequestSpec`` (not just prompt/max_new), so
+    eos_token, sampling params, priority class and tenant all survive the
+    router -> replica hop; ``prompt``/``max_new`` stay as read-through
+    properties for existing policy/metrics code."""
+
+    __slots__ = ("crid", "spec", "replica", "tokens", "shed",
                  "error", "done", "t_submit", "t_engine_submit", "t_done",
                  "engine_metrics", "trace_id")
 
-    def __init__(self, crid: int, prompt, max_new: int):
+    def __init__(self, crid: int, request, max_new: Optional[int] = None):
         self.crid = crid
-        self.prompt = np.asarray(prompt, np.int32)
-        self.max_new = max_new
+        self.spec: RequestSpec = as_spec(request, max_new)
         self.trace_id = -1                   # minted at router admission
         self.replica: Optional[int] = None
         self.tokens: Optional[np.ndarray] = None
@@ -57,6 +62,14 @@ class ClusterRequest:
         self.t_engine_submit: Optional[float] = None
         self.t_done: Optional[float] = None
         self.engine_metrics = None           # serving.engine.RequestMetrics
+
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.spec.prompt
+
+    @property
+    def max_new(self) -> int:
+        return self.spec.max_new
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         if not self.done.wait(timeout):
@@ -159,7 +172,7 @@ class Replica:
                 # request's flow chain crosses from the router lane into
                 # this replica's lane under one id.
                 req = self.engine.submit(
-                    h.prompt, h.max_new,
+                    h.spec,
                     trace_id=(h.trace_id if h.trace_id >= 0 else None))
             except Exception as e:          # oversize prompt etc: fail the
                 h.error = e                 # handle, not the replica thread

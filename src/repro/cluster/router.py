@@ -25,15 +25,18 @@ deterministic given their inputs:
 
 from __future__ import annotations
 
+import dataclasses
+import math
 import threading
 import zlib
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
 from repro.cluster.replica import ClusterRequest, ReplicaPool, ReplicaView
 from repro.obs import NULL_TRACER
+from repro.serving.request import PRIORITIES, as_spec, priority_rank
 
 # Tokens hashed by prefix-affinity: one engine KV block's worth keeps the
 # key aligned with what the prefix cache can actually share.
@@ -70,11 +73,38 @@ POLICIES: Dict[str, Callable] = {
 }
 
 
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant admission ledger (offered/admitted/shed counters survive
+    the run; in-flight is recomputed live from the handle list)."""
+
+    offered: int = 0
+    admitted: int = 0
+    shed: int = 0
+
+
 class Router:
-    """Admission queue + dispatcher thread over a ReplicaPool."""
+    """Admission queue + dispatcher thread over a ReplicaPool.
+
+    Admission is class- and tenant-aware:
+
+      * ``batch_pending_frac`` shrinks the in-flight window for
+        non-interactive classes — batch work sheds at
+        ``max_pending * frac`` so a batch flood leaves headroom the
+        interactive class can still claim (shed reason ``"window"``).
+      * ``tenant_share`` caps any single tenant's in-flight share of the
+        window at ``ceil(max_pending * share)`` (shed reason ``"tenant"``)
+        so one tenant cannot monopolize admission.
+
+    Dispatch is priority-ordered: accepted requests queue per class and
+    the dispatcher always forwards the best class first, so interactive
+    work reaches replica inboxes ahead of batch work admitted earlier.
+    """
 
     def __init__(self, pool: ReplicaPool, policy="round-robin", *,
                  max_pending: Optional[int] = None, seed: int = 0,
+                 batch_pending_frac: float = 1.0,
+                 tenant_share: Optional[float] = None,
                  async_dispatch: bool = True, tracer=None, recorder=None):
         if isinstance(policy, str):
             if policy not in POLICIES:
@@ -84,6 +114,14 @@ class Router:
         self.pool = pool
         self.policy = policy
         self.max_pending = max_pending     # in-flight bound; None = unbounded
+        if not 0.0 < batch_pending_frac <= 1.0:
+            raise ValueError(
+                f"batch_pending_frac must be in (0, 1], got {batch_pending_frac}")
+        if tenant_share is not None and not 0.0 < tenant_share <= 1.0:
+            raise ValueError(
+                f"tenant_share must be in (0, 1], got {tenant_share}")
+        self.batch_pending_frac = batch_pending_frac
+        self.tenant_share = tenant_share
         self.seed = seed
         # Distributed request tracing: the router lane mints every accepted
         # request's trace id (= crid, cluster-unique) and starts its flow
@@ -101,11 +139,15 @@ class Router:
         self.recorder = recorder
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
-        self._queue: "deque[ClusterRequest]" = deque()
+        # Per-class dispatch deques, drained best class first.
+        self._queues: Dict[str, Deque[ClusterRequest]] = {
+            p: deque() for p in PRIORITIES}
         self._live: List[ClusterRequest] = []
         self.handles: List[ClusterRequest] = []   # every accepted request
         self.offered = 0
         self.shed = 0
+        self.shed_by_class: Dict[str, int] = {p: 0 for p in PRIORITIES}
+        self.tenants: Dict[str, TenantStats] = {}
         self.dispatched = 0
         self._crid = 0
         self._stop = False
@@ -121,22 +163,53 @@ class Router:
         self._live = [h for h in self._live if not h.done.is_set()]
         return len(self._live)
 
-    def submit(self, prompt, max_new: int) -> Optional[ClusterRequest]:
-        """Admit or shed.  Backpressure is an in-flight window: accepted but
+    def _tenant_in_flight_locked(self, tenant: str) -> int:
+        # Only meaningful right after _in_flight_locked pruned the list.
+        return sum(1 for h in self._live if h.spec.tenant == tenant)
+
+    def _shed_bound_locked(self, priority: str) -> Optional[int]:
+        """In-flight window for this class: batch classes see a shrunken
+        window so interactive arrivals always find headroom."""
+        if self.max_pending is None:
+            return None
+        if priority_rank(priority) > 0:
+            return max(1, int(self.max_pending * self.batch_pending_frac))
+        return self.max_pending
+
+    def submit(self, request, max_new: Optional[int] = None, *,
+               eos_token: Optional[int] = None) -> Optional[ClusterRequest]:
+        """Admit or shed a ``RequestSpec`` (or the legacy ``(prompt,
+        max_new)`` form).  Backpressure is an in-flight window: accepted but
         unfinished requests (queued here, queued at a replica, or running)
-        count against ``max_pending``; at the bound, new arrivals shed."""
+        count against the class's window; a tenant over its share sheds
+        even with window headroom."""
+        spec = as_spec(request, max_new, eos_token=eos_token)
         with self._lock:
             self.offered += 1
-            if (self.max_pending is not None
-                    and self._in_flight_locked() >= self.max_pending):
+            stats = self.tenants.setdefault(spec.tenant, TenantStats())
+            stats.offered += 1
+            in_flight = self._in_flight_locked()
+            bound = self._shed_bound_locked(spec.priority)
+            reason = None
+            if bound is not None and in_flight >= bound:
+                reason = "window"
+            elif (self.tenant_share is not None
+                  and self.max_pending is not None
+                  and self._tenant_in_flight_locked(spec.tenant) >= max(
+                      1, math.ceil(self.max_pending * self.tenant_share))):
+                reason = "tenant"
+            if reason is not None:
                 self.shed += 1
+                self.shed_by_class[spec.priority] += 1
+                stats.shed += 1
                 self.tracer.instant(self._ev_shed, len(self._live))
                 recorder = self.recorder
             else:
-                h = ClusterRequest(self._crid, prompt, max_new)
+                stats.admitted += 1
+                h = ClusterRequest(self._crid, spec)
                 h.trace_id = h.crid
                 self._crid += 1
-                self._queue.append(h)
+                self._queues[spec.priority].append(h)
                 self._live.append(h)
                 self.handles.append(h)
                 if self.tracer.enabled:
@@ -152,23 +225,43 @@ class Router:
         if recorder is not None:
             recorder.trigger("shed", extra={
                 "offered": self.offered, "shed": self.shed,
-                "max_pending": self.max_pending})
+                "max_pending": self.max_pending, "reason": reason,
+                "priority": spec.priority, "tenant": spec.tenant})
         return None
 
     @property
     def shed_rate(self) -> float:
         return self.shed / max(1, self.offered)
 
+    def tenant_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant admission snapshot, live in-flight included."""
+        with self._lock:
+            self._in_flight_locked()
+            return {
+                t: {"offered": s.offered, "admitted": s.admitted,
+                    "shed": s.shed,
+                    "in_flight": self._tenant_in_flight_locked(t)}
+                for t, s in sorted(self.tenants.items())}
+
     # -- dispatch ------------------------------------------------------------
+
+    def _next_locked(self) -> Optional[ClusterRequest]:
+        """Pop the head of the best non-empty class queue."""
+        for p in PRIORITIES:
+            if self._queues[p]:
+                return self._queues[p].popleft()
+        return None
 
     def _dispatch_loop(self) -> None:
         while True:
             with self._not_empty:
-                while not self._queue and not self._stop:
+                while (not any(self._queues.values())) and not self._stop:
                     self._not_empty.wait(0.05)
-                if self._stop and not self._queue:
-                    return
-                h = self._queue.popleft()
+                h = self._next_locked()
+                if h is None:
+                    if self._stop:
+                        return
+                    continue
                 step = self.dispatched
                 self.dispatched += 1
             # Policy outside the lock: views poll replica state, which may
@@ -192,9 +285,9 @@ class Router:
         deterministic twin of the dispatcher, for run_sync tests)."""
         while True:
             with self._lock:
-                if not self._queue:
+                h = self._next_locked()
+                if h is None:
                     return
-                h = self._queue.popleft()
                 step = self.dispatched
                 self.dispatched += 1
             idx = self.policy(self.pool.views(), h.prompt,

@@ -24,12 +24,16 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.request import RequestSpec, SamplingParams
+
 
 @dataclasses.dataclass(frozen=True)
 class TraceItem:
     t: float                      # arrival offset (s) from trace start
     prompt: Tuple[int, ...]       # token ids
     max_new: int
+    priority: str = "interactive"  # SLO class (serving.request.PRIORITIES)
+    tenant: str = "default"
 
 
 @dataclasses.dataclass
@@ -54,7 +58,9 @@ class Trace:
                 "version": 1,
                 "meta": self.meta,
                 "items": [
-                    {"t": it.t, "prompt": list(it.prompt), "max_new": it.max_new}
+                    {"t": it.t, "prompt": list(it.prompt),
+                     "max_new": it.max_new, "priority": it.priority,
+                     "tenant": it.tenant}
                     for it in self.items
                 ],
             }, f)
@@ -68,7 +74,9 @@ class Trace:
         return Trace(
             items=[TraceItem(t=float(d["t"]),
                              prompt=tuple(int(x) for x in d["prompt"]),
-                             max_new=int(d["max_new"]))
+                             max_new=int(d["max_new"]),
+                             priority=str(d.get("priority", "interactive")),
+                             tenant=str(d.get("tenant", "default")))
                    for d in raw["items"]],
             meta=dict(raw.get("meta", {})),
         )
@@ -82,6 +90,9 @@ class TrafficConfig:
     gaps); ``inf`` front-loads every request at t=0 (a drain test).
     ``mixture`` rows are ``(weight, lo, hi)`` inclusive prompt-length
     ranges; ``shared_prefix`` tokens are prepended to every prompt.
+    ``class_mix`` rows are ``(priority, weight)`` SLO-class assignment
+    probabilities (empty = all interactive); ``tenants > 1`` spreads
+    requests uniformly over synthetic tenant ids ``t0..t{n-1}``.
     """
 
     n_requests: int = 32
@@ -91,13 +102,23 @@ class TrafficConfig:
     shared_prefix: Tuple[int, ...] = ()
     max_new: Tuple[int, int] = (4, 16)
     seed: int = 0
+    class_mix: Tuple[Tuple[str, float], ...] = ()
+    tenants: int = 1
 
 
 def generate(cfg: TrafficConfig) -> Trace:
     """Seeded workload synthesis: same config -> token-identical trace."""
     rng = np.random.default_rng(cfg.seed)
+    # Class/tenant labels draw from their own stream so labelling a
+    # workload never perturbs the prompt/arrival draws: a labelled trace
+    # stays token-identical to its unlabelled twin.
+    lrng = np.random.default_rng(cfg.seed + 0x5EED)
     weights = np.asarray([w for w, _, _ in cfg.mixture], np.float64)
     weights = weights / weights.sum()
+    cls_names = [c for c, _ in cfg.class_mix]
+    cls_w = np.asarray([w for _, w in cfg.class_mix], np.float64)
+    if len(cls_names):
+        cls_w = cls_w / cls_w.sum()
     items, t = [], 0.0
     for _ in range(cfg.n_requests):
         if np.isfinite(cfg.rate_rps):
@@ -108,7 +129,12 @@ def generate(cfg: TrafficConfig) -> Trace:
         suffix = rng.integers(0, cfg.vocab, size=length)
         prompt = cfg.shared_prefix + tuple(int(x) for x in suffix)
         max_new = int(rng.integers(cfg.max_new[0], cfg.max_new[1] + 1))
-        items.append(TraceItem(t=t, prompt=prompt, max_new=max_new))
+        priority = ("interactive" if not cls_names
+                    else cls_names[int(lrng.choice(len(cls_names), p=cls_w))])
+        tenant = ("default" if cfg.tenants <= 1
+                  else f"t{int(lrng.integers(0, cfg.tenants))}")
+        items.append(TraceItem(t=t, prompt=prompt, max_new=max_new,
+                               priority=priority, tenant=tenant))
     meta = dataclasses.asdict(cfg)
     meta["shared_prefix_len"] = len(cfg.shared_prefix)
     meta.pop("shared_prefix")            # keep metadata compact
@@ -123,13 +149,17 @@ def generate(cfg: TrafficConfig) -> Trace:
 def mixed_traffic(vocab: int, *, n: int = 32, seed: int = 0,
                   rate_rps: float = float("inf"),
                   max_prompt: int = 48, max_new: Tuple[int, int] = (4, 16),
-                  ) -> Trace:
-    """Short/long prompt mixture — the throughput-scaling scenario."""
+                  class_mix: Optional[Tuple[Tuple[str, float], ...]] = None,
+                  tenants: int = 1) -> Trace:
+    """Short/long prompt mixture — the throughput-scaling scenario;
+    optionally labelled with SLO classes and synthetic tenants (the
+    multi-tenant scheduling scenario)."""
     short_hi = max(4, max_prompt // 3)
     return generate(TrafficConfig(
         n_requests=n, rate_rps=rate_rps, vocab=vocab,
         mixture=((0.7, 4, short_hi), (0.3, short_hi, max_prompt)),
         max_new=max_new, seed=seed,
+        class_mix=tuple(class_mix) if class_mix else (), tenants=tenants,
     ))
 
 
@@ -158,8 +188,13 @@ def shared_system_prompt(vocab: int, *, n: int = 16, seed: int = 0,
 
 def replay(trace: Trace, submit: Callable, *,
            speed: Optional[float] = None,
+           sampling: Optional[SamplingParams] = None,
            sleep=time.sleep, clock=time.monotonic) -> Tuple[list, int]:
-    """Feed a trace through `submit(prompt, max_new)`.
+    """Feed a trace through ``submit(spec)`` — any of the three submit
+    surfaces (``Engine.submit``, ``Scheduler.submit``, ``Router.submit``)
+    accepts the ``RequestSpec`` built per item, which carries the item's
+    priority class and tenant (and, optionally, shared ``sampling``
+    params for every request).
 
     ``speed=None`` replays as fast as possible (a drain/throughput test);
     a finite speed replays arrival offsets scaled by it (2.0 = twice real
@@ -173,7 +208,11 @@ def replay(trace: Trace, submit: Callable, *,
             wait = it.t / speed - (clock() - t0)
             if wait > 0:
                 sleep(wait)
-        h = submit(np.asarray(it.prompt, np.int32), it.max_new)
+        spec = RequestSpec(
+            prompt=np.asarray(it.prompt, np.int32), max_new=it.max_new,
+            priority=it.priority, tenant=it.tenant,
+            sampling=sampling if sampling is not None else SamplingParams())
+        h = submit(spec)
         if h is None:
             shed += 1
         else:

@@ -37,9 +37,33 @@ from repro.serving.engine import (  # re-exported for back-compat
     autotune_for_serving,
     serving_gemm_shapes,
 )
+from repro.serving.request import PRIORITIES, RequestSpec, SamplingParams
 
 __all__ = ["Engine", "autotune_for_serving", "serving_gemm_shapes",
            "token_by_token_prefill", "serve_cluster", "main"]
+
+
+def _parse_class_mix(spec: str):
+    """'interactive=0.7,batch=0.3' -> (('interactive', 0.7), ('batch', 0.3));
+    empty string -> None (all-interactive traffic)."""
+    if not spec:
+        return None
+    mix = []
+    for part in spec.split(","):
+        name, _, w = part.partition("=")
+        name = name.strip()
+        if name not in PRIORITIES:
+            raise SystemExit(f"--priority-classes: unknown class {name!r}; "
+                             f"expected one of {PRIORITIES}")
+        mix.append((name, float(w) if w else 1.0))
+    return tuple(mix)
+
+
+def _sampling_from_args(args) -> SamplingParams:
+    """CLI sampling knobs -> SamplingParams (temperature 0 = greedy)."""
+    return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p,
+                          seed=args.seed if args.seed >= 0 else None)
 
 
 def warm_token_by_token(cfg, params, slots: int, max_seq: int):
@@ -110,7 +134,7 @@ def compare_prefill(cfg, params, prompts: List[np.ndarray], *, slots: int,
         # max_new=1: the first token falls out of the final chunk, so each
         # run is pure prefill.
         for p in prompts[:slots]:
-            eng.submit(p, max_new=1)
+            eng.submit(RequestSpec(prompt=p, max_new=1))
         eng.run()
 
     t_legacy, t_chunked = float("inf"), float("inf")
@@ -164,6 +188,8 @@ def serve_cluster(cfg, args) -> None:
     from repro import cluster
 
     max_seq = args.prompt_len + args.gen_len + 1
+    sampling = _sampling_from_args(args)
+    class_mix = _parse_class_mix(args.priority_classes)
     pool = cluster.ReplicaPool(
         cfg, args.replicas, slots=args.slots or 2, max_seq=max_seq,
         block_size=args.block_size, num_blocks=args.kv_blocks or None,
@@ -172,6 +198,7 @@ def serve_cluster(cfg, args) -> None:
         kv_precision=args.kv_precision,
         prefix_cache=args.prefix_cache,
         speculative=args.draft_k if args.speculative else False,
+        sampling=not sampling.is_greedy, preempt=args.preempt,
         trace=bool(args.trace_out))
     # Router lane for the distributed trace: admission/shed/route events
     # live on their own pid above the replica lanes, and every request's
@@ -194,13 +221,16 @@ def serve_cluster(cfg, args) -> None:
           f"(steps compiled once, shared)")
     trace = cluster.mixed_traffic(
         cfg.vocab, n=args.requests, seed=0,
-        max_prompt=args.prompt_len, max_new=(2, args.gen_len))
+        max_prompt=args.prompt_len, max_new=(2, args.gen_len),
+        class_mix=class_mix, tenants=args.tenants)
     pool.start()
     router = cluster.Router(pool, policy=args.router_policy,
                             max_pending=args.max_pending or None,
                             tracer=router_tracer, recorder=recorder)
     t0 = time.time()
-    handles, shed = cluster.replay(trace, router.submit)
+    handles, shed = cluster.replay(
+        trace, router.submit,
+        sampling=None if sampling.is_greedy else sampling)
     router.drain()
     elapsed = time.time() - t0
     m = cluster.aggregate(pool, router, elapsed_s=elapsed)
@@ -275,6 +305,31 @@ def main(argv=None):
     ap.add_argument("--max-pending", type=int, default=0,
                     help="cluster backpressure: in-flight request bound "
                          "(0 = unbounded; overflow is shed)")
+    ap.add_argument("--priority-classes", default="",
+                    help="SLO class mix for generated traffic, e.g. "
+                         "'interactive=0.7,batch=0.3' (empty = all "
+                         "interactive); classes drive admission order, "
+                         "class-aware shedding, and --preempt victims")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="spread generated traffic over N synthetic tenant "
+                         "ids (per-tenant fairness accounting in the router)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="let interactive arrivals preempt decoding batch "
+                         "requests: the victim's KV blocks swap to host "
+                         "memory and restore on re-admission (attention-only "
+                         "archs)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax, the "
+                         "default; >0 samples on-device with per-request "
+                         "PRNG streams)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest-probability tokens "
+                         "(0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=-1,
+                    help="sampling PRNG seed shared by all requests "
+                         "(-1 = derive per-request from the request id)")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome-trace/Perfetto JSON of the run "
                          "(per-request lifecycle spans + per-tick phases; "
@@ -296,6 +351,8 @@ def main(argv=None):
     cfg = configs.get_smoke(args.arch)
     if args.replicas > 1:
         return serve_cluster(cfg, args)
+    sampling = _sampling_from_args(args)
+    class_mix = _parse_class_mix(args.priority_classes)
     slots = args.slots or args.requests
     max_seq = args.prompt_len + args.gen_len + 1
     eng = Engine(
@@ -308,6 +365,7 @@ def main(argv=None):
         kv_precision=args.kv_precision,
         prefix_cache=args.prefix_cache,
         speculative=args.draft_k if args.speculative else False,
+        sampling=not sampling.is_greedy, preempt=args.preempt,
         trace=bool(args.trace_out),
         verbose=True,
     )
@@ -320,8 +378,18 @@ def main(argv=None):
         rng.integers(0, cfg.vocab, size=rng.integers(4, args.prompt_len + 1))
         for _ in range(args.requests)
     ]
+    # Class assignment draws from its own stream so labelling never
+    # perturbs the prompt draws above (same rule as cluster.traffic).
+    crng = np.random.default_rng(0x5EED)
+    names = [c for c, _ in (class_mix or ())]
+    weights = np.asarray([w for _, w in (class_mix or ())], np.float64)
+    if names:
+        weights = weights / weights.sum()
     for p in prompts:
-        eng.submit(p, max_new=args.gen_len)
+        prio = (PRIORITIES[0] if not names
+                else names[int(crng.choice(len(names), p=weights))])
+        eng.submit(RequestSpec(prompt=p, max_new=args.gen_len,
+                               sampling=sampling, priority=prio))
     t0 = time.time()
     results = eng.run()
     t_serve = time.time() - t0

@@ -84,6 +84,37 @@ def make_paged_verify_step(cfg: ArchConfig):
     return paged_verify_step
 
 
+def make_paged_sample_step(cfg: ArchConfig):
+    """Decode step + on-device temperature/top-k/top-p sampling: same trunk
+    as the paged serve step, but the head draws from the per-(seed, index)
+    PRNG stream instead of handing logits back for a host argmax.  Engaged
+    only when a batch contains a non-greedy request — all-greedy batches
+    keep dispatching the plain serve step (bitwise-identical paths)."""
+
+    def paged_sample_step(params, state: M.PagedDecodeState, tokens, active,
+                          temperature, top_k, top_p, seeds, gen_idx):
+        return M.paged_decode_sample_step(params, cfg, state, tokens, active,
+                                          temperature, top_k, top_p, seeds,
+                                          gen_idx)
+
+    return paged_sample_step
+
+
+def make_paged_verify_sample_step(cfg: ArchConfig):
+    """Speculative verification under stochastic sampling (rejection
+    sampling against the drafted point mass); bucketed per draft width S
+    exactly like the greedy verify step."""
+
+    def paged_verify_sample_step(params, state: M.PagedDecodeState, tokens,
+                                 active, limits, eos, temperature, top_k,
+                                 top_p, seeds, gen_idx):
+        return M.paged_verify_sample_step(params, cfg, state, tokens, active,
+                                          limits, eos, temperature, top_k,
+                                          top_p, seeds, gen_idx)
+
+    return paged_verify_sample_step
+
+
 def make_prefill_chunk_step(cfg: ArchConfig):
     """Multi-token prefill: advance one slot by a (1, C) chunk of prompt.
 

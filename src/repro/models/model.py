@@ -494,6 +494,180 @@ def _commit_verified(active, idx, per_pos_caches, old_caches):
     return tuple(out)
 
 
+# ---------------------------------------------------------------------------
+# Sampling: temperature / top-k / top-p with per-request on-device PRNG keys
+# ---------------------------------------------------------------------------
+
+
+def _adjusted_logits(logits, temperature, top_k, top_p):
+    """Apply temperature / top-k / top-p to logits (..., V); the knob arrays
+    broadcast over logits.shape[:-1].  Returns unnormalized log-probs with
+    truncated entries at -inf — feed straight into ``jax.random.categorical``
+    (softmax of the result is the sampling distribution p-tilde).
+
+    Rows with ``temperature <= 0`` are *greedy*: they collapse to a one-hot
+    0/-inf row at ``argmax(logits)``, so a categorical draw over them emits
+    exactly the token the greedy decode paths would (argmax over float32 is
+    exact for every pool dtype — bf16 upcasts losslessly)."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    greedy = temperature <= 0.0
+    scaled = logits / jnp.where(greedy, 1.0, temperature)[..., None]
+    desc = jnp.sort(scaled, axis=-1)[..., ::-1]
+    # top-k: keep entries >= the kth-largest (k=0 disables). Ties at the
+    # threshold all survive — harmless broadening, never exclusion.
+    k = jnp.where(top_k > 0, jnp.minimum(top_k, V), V)
+    kth = jnp.take_along_axis(desc, (k - 1)[..., None], axis=-1)
+    keep = scaled >= kth
+    # top-p (nucleus): keep the smallest prefix of the sorted distribution
+    # whose mass reaches top_p.  Exclusive cumsum: a token stays while the
+    # mass *before* it is < top_p, so the boundary token is always included
+    # and top_p=1.0 keeps everything.
+    probs = jax.nn.softmax(desc, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs
+    in_nucleus = before < top_p[..., None]
+    cutoff = jnp.min(jnp.where(in_nucleus, desc, jnp.inf), axis=-1,
+                     keepdims=True)
+    keep = keep & (scaled >= cutoff)
+    adj = jnp.where(keep, scaled, -jnp.inf)
+    onehot = (jnp.arange(V, dtype=jnp.int32)[None, :].reshape(
+        (1,) * (logits.ndim - 1) + (V,))
+        == jnp.argmax(logits, axis=-1, keepdims=True))
+    return jnp.where(greedy[..., None], jnp.where(onehot, 0.0, -jnp.inf), adj)
+
+
+def _fold_keys(seeds, idx):
+    """Per-element PRNG keys: fold the 0-based generated-token index into
+    PRNGKey(seed).  The stream is a pure function of (seed, index) — never
+    of batch composition, tick boundaries, or chunking — so a seeded
+    request replays bitwise-identically whatever else the engine is
+    serving.  seeds/idx share a shape; returns that shape + key tail."""
+    shape = idx.shape
+    flat = jax.vmap(
+        lambda s, i: jax.random.fold_in(jax.random.PRNGKey(s), i)
+    )(jnp.asarray(seeds, jnp.int32).reshape(-1),
+      jnp.asarray(idx, jnp.int32).reshape(-1))
+    return flat.reshape(shape + flat.shape[1:])
+
+
+def sample_tokens(logits, seeds, gen_idx, temperature, top_k, top_p):
+    """Draw one token per row from adjusted logits (..., V) using the
+    per-(seed, gen_idx) key stream; greedy rows return argmax exactly."""
+    adj = _adjusted_logits(logits, temperature, top_k, top_p)
+    keys = _fold_keys(seeds, gen_idx)
+    toks = jax.vmap(jax.random.categorical)(
+        keys.reshape((-1,) + keys.shape[len(gen_idx.shape):]),
+        adj.reshape(-1, adj.shape[-1]))
+    return toks.reshape(adj.shape[:-1]).astype(jnp.int32)
+
+
+def paged_decode_sample_step(
+    params, cfg: ArchConfig, state: PagedDecodeState, tokens: jax.Array,
+    active: Optional[jax.Array], temperature: jax.Array, top_k: jax.Array,
+    top_p: jax.Array, seeds: jax.Array, gen_idx: jax.Array,
+) -> Tuple[jax.Array, PagedDecodeState]:
+    """``paged_decode_step`` + on-device sampling: returns (tokens (B,),
+    new_state).  The trunk pass is byte-identical to the greedy step; only
+    the head differs (sample vs host-side argmax), and greedy rows inside a
+    mixed batch still emit argmax (see ``_adjusted_logits``)."""
+    logits, new_state = paged_decode_step(params, cfg, state, tokens, active)
+    sampled = sample_tokens(logits[:, -1], seeds, gen_idx,
+                            temperature, top_k, top_p)
+    return sampled, new_state
+
+
+def paged_verify_sample_step(
+    params, cfg: ArchConfig, state: PagedDecodeState, tokens: jax.Array,
+    active: jax.Array, limits: jax.Array, eos: jax.Array,
+    temperature: jax.Array, top_k: jax.Array, top_p: jax.Array,
+    seeds: jax.Array, gen_idx: jax.Array,
+) -> Tuple[jax.Array, jax.Array, PagedDecodeState]:
+    """Speculative verification under stochastic sampling: the rejection-
+    sampling analogue of ``paged_verify_step`` (same inputs + the sampling
+    knob arrays; same (out (B, S), n_new (B,), state) contract).
+
+    The drafter is deterministic (a point mass at its guess d_j), so full
+    leftover-distribution rejection sampling reduces to: accept d_j with
+    probability p-tilde(d_j) — a uniform draw from the position's key —
+    and on the first real rejection resample from p-tilde with the rejected
+    token masked out (the leftover distribution after removing the point
+    mass's accepted share).  The bonus token after a fully-accepted (or
+    limit-capped) run samples p-tilde unmasked, exactly like a decode tick.
+    Every emitted position is therefore distributed exactly p-tilde —
+    speculation changes wall-clock, not the output law.  Greedy rows
+    (temperature <= 0) degenerate to the argmax accept rule of
+    ``paged_verify_step``: p-tilde(d) is 0 or 1, and the masked resample
+    can only land on the argmax.
+
+    Position j consumes the uniform at key (seed, gen_idx + j), and the
+    resample folds one extra step off that key — a run with the same seeds
+    and drafts replays bitwise-identically, though the realized stream
+    differs from the non-speculative stream for the same seed (same law,
+    different draws).
+    """
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    positions = state.lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x, per_pos = _trunk_step(
+        params, cfg, x, positions, state.caches, state.lengths,
+        state.block_tables, collect_states=True,
+    )
+    x = blocks._norm(x, params["final_norm"], cfg)
+    logits = _unembed(x, params, cfg)                       # (B, S, vocab)
+    V = logits.shape[-1]
+
+    bcast = lambda a: jnp.broadcast_to(jnp.asarray(a)[:, None], (B, S))
+    adj = _adjusted_logits(logits, bcast(temperature), bcast(top_k),
+                           bcast(top_p))
+    probs = jax.nn.softmax(adj, axis=-1)                    # p-tilde
+    idx = bcast(gen_idx) + jnp.arange(S, dtype=jnp.int32)[None, :]
+    keys = _fold_keys(bcast(seeds), idx)                    # (B, S, key)
+    u = jax.vmap(jax.random.uniform)(
+        keys.reshape((-1,) + keys.shape[2:])).reshape(B, S)
+
+    # Accept drafted token d_j (input tokens[:, j+1], scored at position j)
+    # with probability p-tilde(d_j); the kept run is the capped prefix of
+    # consecutive accepts, mirroring the greedy cumprod.
+    drafts = tokens[:, 1:]                                  # (B, S-1)
+    p_draft = jnp.take_along_axis(
+        probs[:, :-1], drafts[..., None], axis=-1)[..., 0]
+    accept = (u[:, :S - 1] < p_draft).astype(jnp.int32)
+    acc_raw = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)
+    acc = jnp.minimum(acc_raw, jnp.maximum(limits, 1) - 1)
+
+    # Position acc emits a fresh sample: with the rejected draft masked out
+    # when a real rejection stopped the run (leftover distribution), or
+    # unmasked when the run ended by draft/limit exhaustion (bonus token).
+    rejected = (acc == acc_raw) & (acc < S - 1)
+    rows = jnp.arange(B)
+    key2 = jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(keys[rows, acc])
+    bad = tokens[rows, jnp.minimum(acc + 1, S - 1)]
+    masked = jnp.where(
+        rejected[:, None] & (jnp.arange(V)[None, :] == bad[:, None]),
+        -jnp.inf, adj[rows, acc])
+    final = jax.vmap(jax.random.categorical)(key2, masked).astype(jnp.int32)
+
+    draft_shift = jnp.pad(drafts, ((0, 0), (0, 1)))         # (B, S)
+    out = jnp.where(jnp.arange(S, dtype=jnp.int32)[None, :] < acc[:, None],
+                    draft_shift, final[:, None]).astype(jnp.int32)
+
+    emit = jnp.arange(S, dtype=jnp.int32)[None, :] <= acc[:, None]
+    eos_hit = (out == eos[:, None]) & emit
+    first_eos = jnp.argmax(eos_hit, axis=1).astype(jnp.int32)
+    n_new = jnp.where(jnp.any(eos_hit, axis=1), first_eos + 1, acc + 1)
+    n_new = jnp.where(active, n_new, 0).astype(jnp.int32)
+
+    sel = jnp.maximum(n_new - 1, 0)
+    caches = _commit_verified(active, sel, per_pos, state.caches)
+    return out, n_new, PagedDecodeState(
+        caches=caches, block_tables=state.block_tables,
+        lengths=state.lengths + n_new,
+    )
+
+
 def _slice_slot_caches(caches, slot, width: int = 1):
     """Per-kind slot slice: SSM states are per-slot (axis 1 under the group
     axis); paged KV pools are shared and pass through whole."""

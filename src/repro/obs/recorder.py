@@ -95,6 +95,7 @@ class FlightRecorder:
             "queue_depth": len(sched.queue),
             "rejected": sched.rejected,
             "admitted_total": sched.admitted_total,
+            "preemptions": sched.preemptions,
             "active": sum(1 for s in sched.slots if s is not None),
         })
         if engine.drafter is not None:
@@ -184,14 +185,17 @@ class FlightRecorder:
         return paths
 
     def check_engine(self, engine, *, free_frac: float = 0.05,
-                     min_accept: float = 0.2, min_drafted: int = 64
-                     ) -> List[str]:
+                     min_accept: float = 0.2, min_drafted: int = 64,
+                     max_preempt_frac: float = 0.5) -> List[str]:
         """Evaluate built-in pressure triggers against a live engine:
         allocator nearly exhausted (free fraction below `free_frac`, the
-        CoW-eviction death spiral precursor) and speculative acceptance
+        CoW-eviction death spiral precursor), speculative acceptance
         collapse (acceptance below `min_accept` once at least `min_drafted`
         tokens have been drafted — an ngram drafter gone pathological costs
-        a full verify step per miss)."""
+        a full verify step per miss), and preemption pressure (KV swap-outs
+        exceeding `max_preempt_frac` of admitted requests — the scheduler
+        is thrashing batch work in and out instead of making progress;
+        admission or pool sizing needs attention)."""
         paths = []
         st = engine.alloc.stats()
         total = st["in_use"] + st["reserved"] + st["free"]
@@ -206,6 +210,22 @@ class FlightRecorder:
                 "drafted": m.spec_draft_tokens,
                 "accepted": m.spec_accepted_tokens,
                 "acceptance_rate": m.acceptance_rate,
+            })
+            if p:
+                paths.append(p)
+        # getattr-guarded: check_engine also serves partial engine doubles
+        # (tests, external health probes) that predate preemption fields.
+        admitted = getattr(getattr(engine, "scheduler", None),
+                           "admitted_total", 0)
+        preempts = getattr(m, "preemptions", 0)
+        if (admitted > 0 and preempts > 0
+                and preempts / admitted > max_preempt_frac):
+            p = self.trigger("preemption-pressure", extra={
+                "preemptions": preempts,
+                "admitted_total": admitted,
+                "swap_out_blocks": getattr(m, "swap_out_blocks", 0),
+                "swap_in_blocks": getattr(m, "swap_in_blocks", 0),
+                "swap_time_s": getattr(m, "swap_time_s", 0.0),
             })
             if p:
                 paths.append(p)

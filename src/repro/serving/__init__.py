@@ -53,11 +53,17 @@ __all__ = [
 _LAZY = {
     "Engine": ("repro.serving.engine", "Engine"),
     "EngineMetrics": ("repro.serving.engine", "EngineMetrics"),
+    "GREEDY": ("repro.serving.request", "GREEDY"),
     "NgramDrafter": ("repro.serving.speculative", "NgramDrafter"),
+    "PRIORITIES": ("repro.serving.request", "PRIORITIES"),
     "Request": ("repro.serving.scheduler", "Request"),
     "RequestMetrics": ("repro.serving.engine", "RequestMetrics"),
+    "RequestSpec": ("repro.serving.request", "RequestSpec"),
+    "SamplingParams": ("repro.serving.request", "SamplingParams"),
     "Scheduler": ("repro.serving.scheduler", "Scheduler"),
     "SpecConfig": ("repro.serving.speculative", "SpecConfig"),
+    "as_spec": ("repro.serving.request", "as_spec"),
+    "priority_rank": ("repro.serving.request", "priority_rank"),
     "plan_chunks": ("repro.serving.prefill", "plan_chunks"),
     "chunk_buckets": ("repro.serving.prefill", "chunk_buckets"),
     "percentile": ("repro.serving.engine", "percentile"),

@@ -24,9 +24,12 @@ Typical use (launch/serve.py is a thin CLI over exactly this):
     eng = Engine(cfg, slots=4, max_seq=256, autotune=True)
     eng.warmup()
     for p in prompts:
-        eng.submit(p, max_new=16)
+        eng.submit(RequestSpec(prompt=p, max_new=16))
     results = eng.run()
     print(eng.metrics.summary())
+
+(`submit(p, max_new=16)` still works through the deprecated legacy shim —
+serving/request.py owns the one warning path.)
 """
 
 from __future__ import annotations
@@ -45,6 +48,7 @@ from repro.obs import Histogram, MfuMeter, NULL_TRACER, Tracer
 from repro.obs import percentile as _obs_percentile
 from repro.serving import kv_cache as kvc
 from repro.serving.prefill import chunk_buckets
+from repro.serving.request import RequestSpec, as_spec, priority_rank
 from repro.serving.scheduler import Phase, Request, Scheduler
 from repro.serving.speculative import (
     NgramDrafter,
@@ -147,6 +151,9 @@ class RequestMetrics:
     latency_s: float              # submit -> finish
     queue_steps: int              # engine ticks spent waiting for a slot
     cached_tokens: int = 0        # prompt tokens served from a shared prefix
+    priority: str = "interactive"  # SLO class (repro.serving.request)
+    tenant: str = "default"
+    preemptions: int = 0          # times this request was swapped out
 
     @property
     def decode_tok_s(self) -> float:
@@ -180,6 +187,11 @@ class EngineMetrics:
     spec_ticks: int = 0           # decode ticks that ran batched verification
     spec_draft_tokens: int = 0    # draft tokens proposed to the verifier
     spec_accepted_tokens: int = 0  # draft tokens verification accepted
+    preemptions: int = 0          # decode victims swapped out for a higher class
+    swap_out_blocks: int = 0      # KV blocks serialized to host memory
+    swap_in_blocks: int = 0       # KV blocks restored on re-admission
+    swap_time_s: float = 0.0      # wall clock in swap-out + restore transfers
+    sampled_tokens: int = 0       # tokens emitted via the sampling head
     kv_precision: str = "float"   # pool residency (serving/kv_cache.py)
     kv_pool_bytes: int = 0        # resident KV pool bytes across all layers
     kv_pool_blocks: int = 0       # pool blocks (incl. the null block)
@@ -305,6 +317,15 @@ class EngineMetrics:
                 f"accept={self.acceptance_rate:.0%} "
                 f"tok/tick={self.decode_tok_per_tick:.2f}"
             )
+        if self.preemptions:
+            out += (
+                f" preemptions={self.preemptions} "
+                f"(swap out={self.swap_out_blocks} blk "
+                f"in={self.swap_in_blocks} blk "
+                f"{self.swap_time_s * 1e3:.0f}ms)"
+            )
+        if self.sampled_tokens:
+            out += f" sampled={self.sampled_tokens} tok"
         if self.precision != "float":
             saved = (1.0 - self.weight_bytes / self.weight_bytes_float
                      if self.weight_bytes_float else 0.0)
@@ -350,6 +371,11 @@ class EngineMetrics:
             "prefix_lookups": self.prefix_lookups,
             "spec_ticks": self.spec_ticks,
             "acceptance_rate": self.acceptance_rate,
+            "preemptions": self.preemptions,
+            "swap_out_blocks": self.swap_out_blocks,
+            "swap_in_blocks": self.swap_in_blocks,
+            "swap_time_s": self.swap_time_s,
+            "sampled_tokens": self.sampled_tokens,
             "aot_steps": self.aot_steps,
             "cold_compiles": self.cold_compiles,
             "ttft_hist": self.ttft_hist.to_dict(),
@@ -384,6 +410,8 @@ class Engine:
         max_queue: Optional[int] = None,
         prefix_cache=False,
         speculative=False,
+        sampling: bool = False,
+        preempt: bool = False,
         trace=False,
         trace_flow: bool = True,
         request_log: Optional[int] = None,
@@ -429,6 +457,26 @@ class Engine:
         # True -> defaults, int -> draft length K, SpecConfig -> as given.
         self.spec = coerce_spec(speculative)
         self.drafter = NgramDrafter(self.spec) if self.spec else None
+
+        # Stochastic sampling (temperature/top-k/top-p, models/model.py
+        # sampling section).  The flag only controls *warmup*: a sampling
+        # RequestSpec on a sampling=False engine still works, it just pays
+        # one cold compile for the sample step.  All-greedy batches always
+        # dispatch the plain greedy steps, so greedy traffic stays bitwise
+        # identical whatever this flag says.
+        self.sampling = bool(sampling)
+        # KV-swap preemption: an interactive arrival may evict a decoding
+        # batch-class request by serializing its blocks to host memory and
+        # restoring them on re-admission.  Attention-only stacks only —
+        # recurrent (SSM/xLSTM) per-slot state is not block-addressable, so
+        # a swap round trip would silently drop it.
+        self.preempt = bool(preempt)
+        if self.preempt and any(
+                k not in ("attn", "attn_local") for k in cfg.layer_kinds()):
+            raise ValueError(
+                "preempt requires an attention-only stack; "
+                f"{cfg.name} has kinds {cfg.layer_kinds()}")
+        self._swapped: Dict[int, tuple] = {}   # rid -> (payload, n_blocks)
 
         self.scheduler = Scheduler(slots, max_chunk=max_chunk, max_queue=max_queue)
         self.alloc = kvc.BlockAllocator(self.num_blocks, block_size)
@@ -513,6 +561,8 @@ class Engine:
         self._ev_shed = tc("shed")
         self._ev_prefix_hit = tc("prefix_hit")
         self._ev_evict = tc("cache_evict")
+        self._ev_preempt = tc("preempt")
+        self._ev_restore = tc("restore")
         self._account_kv_pools()
 
         # The decode state (KV pools included) is *donated* to every step:
@@ -529,6 +579,19 @@ class Engine:
             steps_lib.make_prefill_chunk_step(cfg), donate_argnums=(1,))
         self._verify_fn = jax.jit(
             steps_lib.make_paged_verify_step(cfg), donate_argnums=(1,))
+        self._sample_fn = jax.jit(
+            steps_lib.make_paged_sample_step(cfg), donate_argnums=(1,))
+        self._verify_sample_fn = jax.jit(
+            steps_lib.make_paged_verify_sample_step(cfg), donate_argnums=(1,))
+        # Prefill first token under sampling: the final chunk's (1, 1, V)
+        # logits feed the same sample_tokens head the decode step uses, so
+        # one seed stream covers every generated position.  No donation —
+        # logits are a fresh output, not the threaded state.
+        self._sample1_fn = jax.jit(
+            lambda lg, t, k, p, s, i: M.sample_tokens(
+                lg[:, -1], jnp.reshape(s, (1,)), jnp.reshape(i, (1,)),
+                jnp.reshape(t, (1,)), jnp.reshape(k, (1,)),
+                jnp.reshape(p, (1,))))
         self._reset_fn = jax.jit(
             lambda state, mask: M.reset_slots(cfg, state, mask),
             donate_argnums=(0,))
@@ -554,6 +617,9 @@ class Engine:
         self._decode_fn = other._decode_fn
         self._chunk_fn = other._chunk_fn
         self._verify_fn = other._verify_fn
+        self._sample_fn = other._sample_fn
+        self._verify_sample_fn = other._verify_sample_fn
+        self._sample1_fn = other._sample1_fn
         self._reset_fn = other._reset_fn
 
     def _account_kv_pools(self) -> None:
@@ -627,10 +693,23 @@ class Engine:
         with self._precision_ctx():
             _, state = self._decode_fn(self.params, state, tokens, active)
             self._warmed.add("decode")
+            logits1 = None
             for c in buckets:
-                _, state = self._chunk_fn(
+                logits1, state = self._chunk_fn(
                     self.params, state, jnp.zeros((1, c), jnp.int32), slot0)
                 self._warmed.add(f"chunk{c}")
+            zt = np.zeros((self.slots,), np.float32)
+            zk = np.zeros((self.slots,), np.int32)
+            op = np.ones((self.slots,), np.float32)
+            if self.sampling:
+                _, state = self._sample_fn(self.params, state, tokens, active,
+                                           zt, zk, op, zk, zk)
+                self._warmed.add("decode_sample")
+                # Warm the prefill-token sampler on real chunk logits so the
+                # compiled executable matches serve-time dtype exactly.
+                self._sample1_fn(logits1, np.float32(0.0), np.int32(0),
+                                 np.float32(1.0), np.int32(0), np.int32(0))
+                self._warmed.add("sample1")
             if self.spec is not None:
                 # Every verify width the drafter can produce (speculative
                 # K buckets), compiled before traffic like the chunk sizes.
@@ -642,6 +721,12 @@ class Engine:
                         jnp.zeros((self.slots, s), jnp.int32), active,
                         lim, no_eos)
                     self._warmed.add(f"verify{s}")
+                    if self.sampling:
+                        _, _, state = self._verify_sample_fn(
+                            self.params, state,
+                            jnp.zeros((self.slots, s), jnp.int32), active,
+                            lim, no_eos, zt, zk, op, zk, zk)
+                        self._warmed.add(f"verify_sample{s}")
             state = self._reset_fn(state, jnp.zeros((self.slots,), bool))
             self._warmed.add("reset")
             jax.block_until_ready(state)
@@ -712,33 +797,32 @@ class Engine:
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, prompt, max_new: int, *,
+    def submit(self, request, max_new: Optional[int] = None, *,
                eos_token: Optional[int] = None,
                trace_id: Optional[int] = None) -> Optional[Request]:
-        """Queue a request.  `trace_id` threads an externally-minted id
+        """Queue a request: a ``RequestSpec``, or the legacy
+        ``(prompt, max_new)`` form (deprecated, shimmed through
+        ``repro.serving.request.as_spec``).  The spec's ``trace_id`` (or
+        the keyword, for legacy callers) threads an externally-minted id
         (the router's cluster-wide request id) into this request's flow
         chain and lifecycle spans; engine-local submissions mint their own,
         namespaced by the tracer's pid so ids never collide across replica
         lanes in one export."""
-        prompt = np.asarray(prompt, np.int32)
-        if len(prompt) == 0:
-            raise ValueError("empty prompt: nothing to prefill")
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1 (the first token falls "
-                             "out of the final prefill chunk)")
-        if len(prompt) + max_new > self.max_seq:
+        spec = as_spec(request, max_new, eos_token=eos_token,
+                       trace_id=trace_id)
+        if spec.prompt_len + spec.max_new > self.max_seq:
             raise ValueError(
-                f"prompt {len(prompt)} + max_new {max_new} exceeds "
+                f"prompt {spec.prompt_len} + max_new {spec.max_new} exceeds "
                 f"max_seq {self.max_seq}")
-        if kvc.blocks_for(len(prompt) + max_new, self.block_size) > self.num_blocks - 1:
+        if (kvc.blocks_for(spec.prompt_len + spec.max_new, self.block_size)
+                > self.num_blocks - 1):
             raise ValueError(
                 f"request needs more KV blocks than the whole pool "
                 f"({self.num_blocks - 1}); raise num_blocks")
-        req = self.scheduler.submit(prompt, max_new, eos_token=eos_token,
-                                    step=self._step)
+        req = self.scheduler.submit(spec, step=self._step)
         tr = self.tracer
         if req is not None:
-            req.trace_id = (int(trace_id) if trace_id is not None
+            req.trace_id = (int(spec.trace_id) if spec.trace_id is not None
                             else (tr.pid << 24) + req.rid)
             self._submit_t[req.rid] = time.monotonic()
             if self._flow:
@@ -747,7 +831,7 @@ class Engine:
                 # "submit" slice (a step when the router already started
                 # the chain in its admit slice).
                 tr.begin(self._ev_submit)
-                if trace_id is None:
+                if spec.trace_id is None:
                     tr.flow_start(self._ev_flow, req.trace_id)
                 else:
                     tr.flow_step(self._ev_flow, req.trace_id)
@@ -760,6 +844,12 @@ class Engine:
 
     def _can_admit(self, req: Request) -> bool:
         need = kvc.blocks_for(req.prompt_len + req.max_new, self.block_size)
+        if req.swapped:
+            # Preempted victim re-admitting: its cache already diverged from
+            # any shared prefix (it decoded past the prompt), so the bytes
+            # are restored verbatim into fresh private blocks — no prefix
+            # fork, full worst-case reservation like a fresh admit.
+            return self.alloc.can_reserve(need)
         if self.prefix_cache is None:
             return self.alloc.can_reserve(need)
         # Prefix path: match full blocks of an already-prefilled identical
@@ -787,11 +877,41 @@ class Engine:
         return True
 
     def _admit(self) -> None:
-        to_reset, seeds = [], []
+        self._admit_once()
+        if not self.preempt:
+            return
+        # Preemption sweep: while a queued request outranks running decode
+        # work, swap the lowest-class, youngest decoding victim out and
+        # retry admission.  Bounded by the slot count (each pass frees at
+        # most one slot, and victims must strictly outrank the head).
+        for _ in range(self.slots):
+            victim = self._pick_victim()
+            if victim is None:
+                break
+            self._swap_out(victim)
+            self._admit_once()
+
+    def _admit_once(self) -> None:
+        to_reset, seeds, restores = [], [], []
         for slot, req in self.scheduler.admit(self._can_admit):
             # Request lifecycle track: the queued span ends here, the prefill
-            # span opens (closed on the prompt-complete prefill chunk).
+            # span opens (closed on the prompt-complete prefill chunk) — or,
+            # for a restored victim, the decode span reopens directly.
             self.tracer.async_end(self._ev_req_queued, req.trace_id)
+            if req.swapped:
+                self.tracer.async_begin(self._ev_req_decode, req.trace_id)
+                n = kvc.blocks_for(req.prompt_len + req.max_new,
+                                   self.block_size)
+                if not self.alloc.reserve(n):
+                    raise RuntimeError(
+                        f"reservation of {n} blocks failed post-admit")
+                self._reserved[req.rid] = n
+                self._seeded[req.rid] = 0   # restored blocks are private
+                restores.append((slot, req))
+                if self._slot_used[slot]:
+                    to_reset.append(slot)
+                self._slot_used[slot] = True
+                continue
             self.tracer.async_begin(self._ev_req_prefill, req.trace_id)
             blocks, ptoks, n_fresh = self._prefix_match.pop(
                 req.rid, ((), 0, None))
@@ -833,6 +953,79 @@ class Engine:
                 self.tables.seed(slot, blocks)
                 lengths[slot] = ptoks
             self.state = self.state._replace(lengths=jnp.asarray(lengths))
+        if restores:
+            self._restore(restores)
+
+    # -- KV-swap preemption --------------------------------------------------
+
+    def _pick_victim(self) -> Optional[Request]:
+        """The decoding request to evict for the queue head: strictly lower
+        class than the head, latest-submitted first (it has done the least
+        work and will re-queue behind no one of its own class).  None when
+        the head would gain nothing (no queue, or no lower-class victim —
+        preemption never reorders within a class)."""
+        head = self.scheduler.next_queued()
+        if head is None:
+            return None
+        head_rank = priority_rank(head.priority)
+        victims = [
+            r for r in self.scheduler.slots
+            if r is not None and r.phase is Phase.DECODE and r.out_tokens
+            and priority_rank(r.priority) > head_rank
+        ]
+        if not victims:
+            return None
+        return max(victims, key=lambda r: (priority_rank(r.priority),
+                                           r.submit_step, r.rid))
+
+    def _swap_out(self, victim: Request) -> None:
+        """Serialize the victim's KV blocks to host memory, release its
+        blocks + reservation (the accounting mirror of _finish), and return
+        it to the front of its class queue."""
+        t0 = time.monotonic()
+        slot = victim.slot
+        ids = list(self.tables.blocks[slot])
+        payload = kvc.swap_out_blocks(self.state.caches, ids)
+        self._swapped[victim.rid] = (payload, len(ids))
+        # Reservation unwind mirrors _finish: seeded (forked-prefix) blocks
+        # were never reserved, so only fresh draws count against it.
+        fresh = len(ids) - self._seeded.pop(victim.rid, 0)
+        unused = max(0, self._reserved.pop(victim.rid, fresh) - fresh)
+        self.scheduler.preempt(victim)
+        self.tables.release(slot, self.alloc, unreserve=unused)
+        self.metrics.preemptions += 1
+        self.metrics.swap_out_blocks += len(ids)
+        self.metrics.swap_time_s += time.monotonic() - t0
+        tr = self.tracer
+        tr.async_end(self._ev_req_decode, victim.trace_id)
+        tr.async_begin(self._ev_req_queued, victim.trace_id)
+        if self._flow:
+            tr.instant(self._ev_preempt, victim.trace_id)
+
+    def _restore(self, restores) -> None:
+        """Swap preempted requests' KV payloads back into freshly-allocated
+        blocks; runs after the reset step (which zeroed the slot) so the
+        restored lengths/tables are what the next step sees."""
+        t0 = time.monotonic()
+        lengths = np.array(self.state.lengths)
+        caches = self.state.caches
+        for slot, req in restores:
+            payload, n_blocks = self._swapped.pop(req.rid)
+            ids = self.alloc.alloc(n_blocks)
+            self.tables.seed(slot, ids)
+            caches = kvc.swap_in_blocks(caches, ids, payload)
+            # Device length between ticks is one behind req.length: the
+            # newest emitted token is the *next* step's input — its KV is
+            # written when it is fed, exactly as if never preempted.
+            lengths[slot] = req.length - 1
+            self._last_token[slot] = req.out_tokens[-1]
+            req.swapped = False
+            self.metrics.swap_in_blocks += n_blocks
+            if self._flow:
+                self.tracer.instant(self._ev_restore, req.trace_id)
+        self.state = self.state._replace(
+            caches=caches, lengths=jnp.asarray(lengths))
+        self.metrics.swap_time_s += time.monotonic() - t0
 
     def _sync_tables(self) -> None:
         if self.tables.dirty:
@@ -863,6 +1056,8 @@ class Engine:
             latency_s=now - t_submit,
             queue_steps=(req.first_token_step or self._step) - req.submit_step,
             cached_tokens=req.cached_tokens,
+            priority=req.priority, tenant=req.tenant,
+            preemptions=req.preemptions,
         ), self._request_log)
         if self._flow:
             # Lands inside the enclosing tick slice (_record_token runs
@@ -870,6 +1065,28 @@ class Engine:
             # arrowhead points at the tick that finished the request.
             self.tracer.flow_end(self._ev_flow, req.trace_id)
         self.tracer.async_end(self._ev_req_decode, req.trace_id)
+
+    def _sampling_args(self, reqs: List[Request]):
+        """Per-slot sampling-knob arrays for a decode/verify batch, or None
+        when every request in it is greedy — the all-greedy fast path keeps
+        dispatching the plain compiled steps, so greedy traffic is bitwise
+        identical with or without sampling support.  Greedy rows inside a
+        mixed batch get temperature 0 and emit argmax on device."""
+        if all(r.sampling.is_greedy for r in reqs):
+            return None
+        temp = np.zeros((self.slots,), np.float32)
+        top_k = np.zeros((self.slots,), np.int32)
+        top_p = np.ones((self.slots,), np.float32)
+        seeds = np.zeros((self.slots,), np.int32)
+        gen_idx = np.zeros((self.slots,), np.int32)
+        for r in reqs:
+            sp = r.sampling
+            temp[r.slot] = max(sp.temperature, 0.0)
+            top_k[r.slot] = sp.top_k
+            top_p[r.slot] = sp.top_p
+            seeds[r.slot] = r.sample_seed
+            gen_idx[r.slot] = len(r.out_tokens)
+        return temp, top_k, top_p, seeds, gen_idx
 
     def _record_token(self, req: Request, token: int) -> None:
         if req.first_token_step is None:
@@ -922,6 +1139,7 @@ class Engine:
             eos[r.slot] = -1 if r.eos_token is None else r.eos_token
             active[r.slot] = True
         self._sync_tables()
+        samp = self._sampling_args(reqs)
         t_dec = time.monotonic()
         # numpy args go straight into the jitted call: the C++ fast path
         # converts them in ~µs, where a standalone jnp.asarray dispatches an
@@ -931,9 +1149,14 @@ class Engine:
         if self._flow:
             for r in reqs:
                 self.tracer.flow_step(self._ev_flow, r.trace_id)
-        greedy, n_new, self.state = self._run_compiled(
-            f"verify{width}", self._verify_fn, self.params, self.state,
-            tokens, active, limits, eos)
+        if samp is None:
+            greedy, n_new, self.state = self._run_compiled(
+                f"verify{width}", self._verify_fn, self.params, self.state,
+                tokens, active, limits, eos)
+        else:
+            greedy, n_new, self.state = self._run_compiled(
+                f"verify_sample{width}", self._verify_sample_fn, self.params,
+                self.state, tokens, active, limits, eos, *samp)
         greedy, n_new = np.asarray(greedy), np.asarray(n_new)
         self.tracer.end(self._ev_verify)
         dt_verify = time.monotonic() - t_dec
@@ -963,6 +1186,8 @@ class Engine:
         self.metrics.decode_steps += 1
         self.metrics.decode_tokens += emitted
         self.metrics.spec_ticks += 1
+        if samp is not None:
+            self.metrics.sampled_tokens += emitted
         # Verify rows: every slot runs the widened step (padding included).
         self.mfu.note("verify", tokens=emitted, rows=self.slots * width,
                       time_s=dt_verify)
@@ -1026,7 +1251,18 @@ class Engine:
                 # generated token (no separate step for it).  Index on the
                 # numpy copy — slicing a device array dispatches un-jitted
                 # primitives that would compile tiny kernels at serve time.
-                self._record_token(req, int(np.argmax(np.asarray(logits)[0, -1])))
+                if req.sampling.is_greedy:
+                    self._record_token(
+                        req, int(np.argmax(np.asarray(logits)[0, -1])))
+                else:
+                    sp = req.sampling
+                    tok = self._run_compiled(
+                        "sample1", self._sample1_fn, logits,
+                        np.float32(sp.temperature), np.int32(sp.top_k),
+                        np.float32(sp.top_p), np.int32(req.sample_seed),
+                        np.int32(len(req.out_tokens)))
+                    self.metrics.sampled_tokens += 1
+                    self._record_token(req, int(np.asarray(tok)[0]))
         elif self.spec is not None and self._decode_speculative(action[1]):
             pass                              # spec tick ran (metrics inside)
         else:
@@ -1043,16 +1279,24 @@ class Engine:
             tokens = self._last_token[:, None]
             active = np.zeros((self.slots,), bool)
             active[[r.slot for r in reqs]] = True
+            samp = self._sampling_args(reqs)
             t_dec = time.monotonic()
             tr.begin(self._ev_decode)
             if self._flow:
                 for r in reqs:
                     tr.flow_step(self._ev_flow, r.trace_id)
-            logits, self.state = self._run_compiled(
-                "decode", self._decode_fn, self.params, self.state, tokens,
-                active)
-            # np.asarray blocks on the result, so the span covers the step.
-            next_tok = np.argmax(np.asarray(logits)[:, -1], axis=-1)
+            if samp is None:
+                logits, self.state = self._run_compiled(
+                    "decode", self._decode_fn, self.params, self.state,
+                    tokens, active)
+                # np.asarray blocks on the result — the span covers the step.
+                next_tok = np.argmax(np.asarray(logits)[:, -1], axis=-1)
+            else:
+                sampled, self.state = self._run_compiled(
+                    "decode_sample", self._sample_fn, self.params, self.state,
+                    tokens, active, *samp)
+                next_tok = np.asarray(sampled)
+                self.metrics.sampled_tokens += len(reqs)
             tr.end(self._ev_decode)
             dt_dec = time.monotonic() - t_dec
             self.metrics.decode_time_s += dt_dec

@@ -211,6 +211,59 @@ def pool_bytes(cache: PagedKVCache) -> int:
     return total
 
 
+def swap_out_blocks(caches, ids) -> List[dict]:
+    """Serialize pool blocks ``ids`` to host memory, one dict of numpy
+    arrays per cache kind — the device->host half of KV-swap preemption.
+
+    The engine stacks per-layer pools with a leading group axis, so the
+    block axis is located from the right: ``k``/``v`` are
+    (..., num_blocks, block_size, H_kv, D) and scales (when int8-resident)
+    are (..., num_blocks, block_size, H_kv).  Payload arrays keep the pool
+    dtype (int8 codes swap as int8 — half the host traffic), and restoring
+    into a *different* set of block ids later is fine: block contents are
+    position-independent, only the table rows carry ordering.
+    """
+    ids = np.asarray(ids, np.int32)
+    out: List[dict] = []
+    for c in caches:
+        if not isinstance(c, PagedKVCache):
+            raise TypeError(
+                "swap_out_blocks requires paged (attention) cache kinds; "
+                "recurrent state is not block-addressable — gate preemption "
+                "to attention-only stacks")
+        entry = {"k": np.asarray(jnp.take(c.k, ids, axis=c.k.ndim - 4)),
+                 "v": np.asarray(jnp.take(c.v, ids, axis=c.v.ndim - 4))}
+        if c.quantized:
+            sax = c.k_scale.ndim - 3
+            entry["k_scale"] = np.asarray(jnp.take(c.k_scale, ids, axis=sax))
+            entry["v_scale"] = np.asarray(jnp.take(c.v_scale, ids, axis=sax))
+        out.append(entry)
+    return out
+
+
+def swap_in_blocks(caches, ids, saved: List[dict]):
+    """Restore a ``swap_out_blocks`` payload into pool blocks ``ids``
+    (freshly allocated — not necessarily the ids swapped out) and return
+    the new cache tuple.  Runs un-jitted between ticks: scatter dispatch
+    cost is the preemption price, measured by benchmarks/sched_bench.py."""
+    ids = np.asarray(ids, np.int32)
+    out = []
+    for c, entry in zip(caches, saved):
+        def put(arr, vals, axis):
+            idx = (slice(None),) * axis + (ids,)
+            return arr.at[idx].set(jnp.asarray(vals))
+
+        k = put(c.k, entry["k"], c.k.ndim - 4)
+        v = put(c.v, entry["v"], c.v.ndim - 4)
+        ks, vs = c.k_scale, c.v_scale
+        if c.quantized:
+            sax = c.k_scale.ndim - 3
+            ks = put(ks, entry["k_scale"], sax)
+            vs = put(vs, entry["v_scale"], sax)
+        out.append(PagedKVCache(k=k, v=v, k_scale=ks, v_scale=vs))
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # Host side: allocation decisions between steps
 # ---------------------------------------------------------------------------

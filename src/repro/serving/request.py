@@ -1,0 +1,146 @@
+"""RequestSpec: the single request-description type for every submit surface.
+
+Before this module each submit signature grew its own keyword args —
+``Engine.submit(prompt, max_new, eos_token=...)``,
+``Scheduler.submit(prompt, max_new, eos_token=..., step=...)``, and
+``Router.submit(prompt, max_new)`` (which could not forward ``eos_token``
+to replicas at all).  Multi-tenant scheduling adds priority class, tenant
+id, sampling params, and a PRNG seed; accreting those onto three divergent
+signatures is how APIs rot.  Instead every surface accepts one frozen
+``RequestSpec`` and the legacy positional ``(prompt, max_new, **kw)`` form
+funnels through a single shim, :func:`as_spec`, which owns the one
+deprecation-warning path.
+
+Design rules:
+
+  * ``RequestSpec`` is *description*, not state: frozen, no mutable
+    progress fields (those live on ``serving.scheduler.Request`` /
+    ``cluster.replica.ClusterRequest``).  The prompt is normalized to a
+    read-only int32 ndarray at construction so every consumer downstream
+    (block math, prefix hashing, device upload) sees one dtype.
+  * ``SamplingParams`` defaults to greedy (``temperature=0``) so a default
+    spec reproduces today's argmax paths token-for-token — the engine
+    routes all-greedy batches through the *same compiled steps* as before.
+  * ``seed=None`` means "derive from the request id": streams stay
+    reproducible run-to-run without forcing callers to invent seeds.
+  * Priority classes are a fixed, ordered vocabulary (``PRIORITIES``,
+    best-first).  The scheduler admits strictly by class rank and the
+    router sheds batch traffic first; free-form class strings would make
+    both comparisons meaningless.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["GREEDY", "PRIORITIES", "RequestSpec", "SamplingParams",
+           "as_spec", "priority_rank"]
+
+# Admission order, best-first: rank 0 preempts rank 1, never vice versa.
+PRIORITIES: Tuple[str, ...] = ("interactive", "batch")
+_RANK = {p: i for i, p in enumerate(PRIORITIES)}
+
+
+def priority_rank(priority: str) -> int:
+    """Smaller = more urgent.  Raises on unknown class names (a typo'd
+    class silently treated as batch would be a debugging tarpit)."""
+    try:
+        return _RANK[priority]
+    except KeyError:
+        raise ValueError(
+            f"unknown priority class {priority!r}; expected one of "
+            f"{PRIORITIES}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Token-sampling knobs.  ``temperature <= 0`` selects greedy argmax
+    (exactly today's decode paths); ``top_k=0`` / ``top_p=1.0`` disable
+    the respective truncations.  ``seed=None`` derives the PRNG stream
+    from the request id at submit time."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RequestSpec:
+    """Immutable description of one generation request, accepted by
+    ``Engine.submit``, ``Scheduler.submit``, and ``Router.submit``."""
+
+    prompt: np.ndarray
+    max_new: int
+    eos_token: Optional[int] = None
+    sampling: SamplingParams = GREEDY
+    priority: str = "interactive"
+    tenant: str = "default"
+    trace_id: Optional[int] = None
+
+    def __post_init__(self):
+        arr = np.ascontiguousarray(np.asarray(self.prompt, np.int32).ravel())
+        arr.flags.writeable = False
+        object.__setattr__(self, "prompt", arr)
+        if arr.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+        priority_rank(self.priority)          # validate the class name
+        if not isinstance(self.sampling, SamplingParams):
+            raise TypeError("sampling must be a SamplingParams, got "
+                            f"{type(self.sampling).__name__}")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+def as_spec(request, max_new: Optional[int] = None, *,
+            eos_token: Optional[int] = None,
+            trace_id: Optional[int] = None,
+            warn: bool = True) -> RequestSpec:
+    """Normalize a submit argument to a ``RequestSpec``.
+
+    The ONE legacy-shim path: a bare token array (plus ``max_new`` /
+    ``eos_token`` keywords) builds a default greedy spec and emits the
+    deprecation warning; an actual ``RequestSpec`` passes through
+    untouched (extra keywords then must not conflict with it).
+    """
+    if isinstance(request, RequestSpec):
+        if max_new is not None and max_new != request.max_new:
+            raise TypeError("pass max_new inside the RequestSpec, not "
+                            "alongside it")
+        if eos_token is not None and eos_token != request.eos_token:
+            raise TypeError("pass eos_token inside the RequestSpec, not "
+                            "alongside it")
+        if trace_id is not None and request.trace_id is None:
+            return dataclasses.replace(request, trace_id=trace_id)
+        return request
+    if max_new is None:
+        raise TypeError("legacy submit(prompt, max_new) form requires "
+                        "max_new")
+    if warn:
+        warnings.warn(
+            "submit(prompt, max_new, ...) is deprecated; pass a "
+            "repro.serving.RequestSpec instead",
+            DeprecationWarning, stacklevel=3)
+    return RequestSpec(prompt=request, max_new=int(max_new),
+                       eos_token=eos_token, trace_id=trace_id)

@@ -16,6 +16,16 @@ overlapping input pre-fetch with compute).  Admission is gated by the
 caller-supplied reservation check, so a request only occupies a slot when
 the KV block pool can cover its worst case — backpressure lands in the
 queue, not mid-flight.
+
+Admission is class-aware: one FIFO deque per priority class
+(repro.serving.request.PRIORITIES, best-first), drained strictly by class
+rank.  Within a class, FIFO order is preserved and a blocked head still
+blocks everything behind it — including lower classes, so a batch request
+can never leapfrog an interactive one that is merely waiting on KV blocks
+(which would hand the blocks to the wrong class).  ``preempt`` returns a
+decoding victim to the *front* of its class queue with its progress intact;
+the engine swaps its KV blocks to host memory and restores them when the
+victim re-admits (phase goes straight back to DECODE, no re-prefill).
 """
 
 from __future__ import annotations
@@ -23,11 +33,19 @@ from __future__ import annotations
 import dataclasses
 import enum
 from collections import deque
-from typing import Callable, Deque, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serving.prefill import next_chunk
+from repro.serving.request import (
+    GREEDY,
+    PRIORITIES,
+    RequestSpec,
+    SamplingParams,
+    as_spec,
+    priority_rank,
+)
 
 
 class Phase(enum.Enum):
@@ -60,6 +78,13 @@ class Request:
     # -- speculative-decoding accounting (engine's spec tick path) --
     spec_drafted: int = 0               # draft tokens proposed over lifetime
     spec_accepted: int = 0              # draft tokens verification accepted
+    # -- multi-tenant scheduling (RequestSpec-carried) --
+    sampling: SamplingParams = GREEDY
+    sample_seed: int = 0               # resolved: spec seed, else rid
+    priority: str = PRIORITIES[0]
+    tenant: str = "default"
+    preemptions: int = 0               # times this request was swapped out
+    swapped: bool = False              # in queue with KV parked on the host
 
     @property
     def prompt_len(self) -> int:
@@ -92,62 +117,118 @@ class Request:
 
 
 class Scheduler:
-    """Slot-based continuous batching with FIFO admission."""
+    """Slot-based continuous batching: per-class FIFO admission."""
 
     def __init__(self, slots: int, *, max_chunk: int = 32,
                  max_queue: Optional[int] = None):
         self.n_slots = slots
         self.max_chunk = max_chunk
         self.max_queue = max_queue
-        self.queue: Deque[Request] = deque()
+        self.queues: Dict[str, Deque[Request]] = {
+            p: deque() for p in PRIORITIES}
         self.slots: List[Optional[Request]] = [None] * slots
         self._next_rid = 0
         self._prefer_prefill = True   # round-robin flip between phases
         self.rejected = 0
         self.admitted_total = 0       # requests that ever reached a slot
         self.peak_queue_depth = 0     # admission-queue high-water mark
+        self.preemptions = 0          # decode slots returned to the queue
+
+    @property
+    def queue(self) -> List[Request]:
+        """Queued requests in admission order (class rank, then FIFO).
+        A view, not the storage — per-class deques are in ``queues``; the
+        property keeps every ``len(scheduler.queue)`` / ``queue[0]``
+        consumer (engine gauges, obs sources, tests) working unchanged."""
+        out: List[Request] = []
+        for p in PRIORITIES:
+            out.extend(self.queues[p])
+        return out
 
     # -- admission -----------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new: int, *,
-               eos_token: Optional[int] = None, step: int = 0) -> Optional[Request]:
-        """Enqueue a request; returns None when the admission queue is full."""
-        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+    def submit(self, request, max_new: Optional[int] = None, *,
+               eos_token: Optional[int] = None,
+               step: int = 0) -> Optional[Request]:
+        """Enqueue a request (``RequestSpec`` or the legacy
+        ``(prompt, max_new)`` form); returns None when the admission queue
+        is full."""
+        spec = as_spec(request, max_new, eos_token=eos_token)
+        depth = sum(len(q) for q in self.queues.values())
+        if self.max_queue is not None and depth >= self.max_queue:
             self.rejected += 1
             return None
+        rid = self._next_rid
+        seed = spec.sampling.seed if spec.sampling.seed is not None else rid
         req = Request(
-            rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
-            max_new=max_new, eos_token=eos_token, submit_step=step,
+            rid=rid, prompt=spec.prompt, max_new=spec.max_new,
+            eos_token=spec.eos_token, submit_step=step,
+            sampling=spec.sampling, sample_seed=int(seed),
+            priority=spec.priority, tenant=spec.tenant,
         )
         self._next_rid += 1
-        self.queue.append(req)
-        if len(self.queue) > self.peak_queue_depth:
-            self.peak_queue_depth = len(self.queue)
+        self.queues[spec.priority].append(req)
+        if depth + 1 > self.peak_queue_depth:
+            self.peak_queue_depth = depth + 1
         return req
+
+    def next_queued(self) -> Optional[Request]:
+        """The request the next free slot would admit (head of the best
+        non-empty class queue), or None when nothing is queued."""
+        for p in PRIORITIES:
+            if self.queues[p]:
+                return self.queues[p][0]
+        return None
 
     def admit(
         self, can_admit: Callable[[Request], bool]
     ) -> List[Tuple[int, Request]]:
         """Move queued requests into free slots while `can_admit` (the
-        engine's block-reservation check) allows; FIFO order is preserved —
-        a blocked head-of-queue request blocks everything behind it (no
-        starvation of large requests)."""
+        engine's block-reservation check) allows, best class first; within
+        a class FIFO order is preserved and a blocked head blocks
+        everything behind it — including lower classes, so blocks freed by
+        finishing work always go to the most urgent waiter (no starvation
+        of large requests, no class inversion)."""
         admitted = []
         for slot in range(self.n_slots):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None:
                 continue
-            if not can_admit(self.queue[0]):
+            head = self.next_queued()
+            if head is None or not can_admit(head):
                 break
-            req = self.queue.popleft()
-            # Start-from-cached-prefix: the engine's admission check may have
-            # found a shared KV prefix for this prompt (req.cached_tokens);
-            # prefill then covers only the uncached suffix.
-            req.slot, req.phase = slot, Phase.PREFILL
-            req.prefilled = req.cached_tokens
+            req = self.queues[head.priority].popleft()
+            if req.swapped:
+                # Preempted victim re-admitting: its cache contents are
+                # restored verbatim by the engine, so it resumes decoding —
+                # prefilled/out_tokens progress survives the round trip.
+                req.slot, req.phase = slot, Phase.DECODE
+            else:
+                # Start-from-cached-prefix: the engine's admission check
+                # may have found a shared KV prefix for this prompt
+                # (req.cached_tokens); prefill then covers only the
+                # uncached suffix.
+                req.slot, req.phase = slot, Phase.PREFILL
+                req.prefilled = req.cached_tokens
+                self.admitted_total += 1
             self.slots[slot] = req
             admitted.append((slot, req))
-        self.admitted_total += len(admitted)
         return admitted
+
+    def preempt(self, req: Request) -> int:
+        """Evict a decoding request back to the *front* of its class queue
+        (it has strict FIFO seniority over everything queued behind it);
+        the engine owns the KV swap-out that makes this safe.  Returns the
+        freed slot."""
+        slot = req.slot
+        assert self.slots[slot] is req and req.phase is Phase.DECODE
+        self.slots[slot] = None
+        req.slot = -1
+        req.phase = Phase.QUEUED
+        req.preemptions += 1
+        req.swapped = True
+        self.queues[req.priority].appendleft(req)
+        self.preemptions += 1
+        return slot
 
     # -- tick policy ---------------------------------------------------------
 
@@ -159,7 +240,8 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slots)
+        return (any(self.queues.values())
+                or any(r is not None for r in self.slots))
 
     def next_action(self):
         pre, dec = self.prefilling(), self.decoding()

@@ -17,6 +17,19 @@ host — while still capturing the regime speculative decoding wins in
 verification makes the output token-identical to non-speculative decoding
 whatever the drafter proposes; a bad draft only costs the wasted columns of
 one GEMM.
+
+Verification contract under sampling (models/model.py
+``paged_verify_sample_step``): the n-gram drafter is a deterministic
+point-mass proposal, so stochastic rejection sampling reduces to accepting
+draft token ``d_j`` with probability ``p̃(d_j)`` — the model's
+temperature/top-k/top-p-adjusted probability of the drafted token — drawn
+against a per-(seed, position) uniform.  On first rejection the replacement
+token resamples from ``p̃`` with the rejected draft token masked out, which
+makes every emitted position exactly ``p̃``-distributed: the same law a
+non-speculative sampled decode of that request would produce (though not
+the same draw, since the uniforms are consumed in a different pattern).
+Greedy requests (``temperature <= 0``) degenerate to the argmax accept
+rule above — token-identical to ``paged_verify_step``.
 """
 
 from __future__ import annotations

@@ -131,8 +131,8 @@ def test_replay_counts_shed():
     tr = traffic.mixed_traffic(64, n=6, seed=0)
     seen = []
 
-    def submit(prompt, max_new):
-        seen.append((tuple(int(x) for x in prompt), max_new))
+    def submit(spec):
+        seen.append((tuple(int(x) for x in spec.prompt), spec.max_new))
         return None if len(seen) % 2 == 0 else object()
 
     handles, shed = traffic.replay(tr, submit)

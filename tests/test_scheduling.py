@@ -1,0 +1,480 @@
+"""Multi-tenant SLO scheduling tests: the unified RequestSpec API across
+all three submit surfaces, priority-class admission, KV-swap preemption
+round trips, on-device sampling (seeded reproducibility + distribution
+equivalence), and router-level tenant fairness / class-aware shedding."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.serving import kv_cache as kvc
+from repro.serving.engine import Engine
+from repro.serving.request import (
+    GREEDY,
+    PRIORITIES,
+    RequestSpec,
+    SamplingParams,
+    as_spec,
+    priority_rank,
+)
+from repro.serving.scheduler import Phase, Scheduler
+
+ARCH = "gemma3-1b"
+
+
+@pytest.fixture(scope="module")
+def warm():
+    """One warmed engine per module: later engines share its jitted steps
+    so the file pays each compile once."""
+    cfg = configs.get_smoke(ARCH)
+    eng = Engine(cfg, slots=2, max_seq=64, block_size=4, seed=0)
+    eng.warmup()
+    return cfg, eng
+
+
+def _engine(cfg, warm_eng, **kw):
+    eng = Engine(cfg, **kw)
+    eng.share_steps_from(warm_eng)
+    eng.warmup()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# RequestSpec / as_spec (host-only)
+# ---------------------------------------------------------------------------
+
+
+def test_request_spec_validation():
+    p = np.arange(4, dtype=np.int32)
+    spec = RequestSpec(prompt=[1, 2, 3], max_new=2)
+    assert spec.prompt.dtype == np.int32 and not spec.prompt.flags.writeable
+    assert spec.sampling is GREEDY and spec.sampling.is_greedy
+    with pytest.raises(ValueError):
+        RequestSpec(prompt=[], max_new=1)
+    with pytest.raises(ValueError):
+        RequestSpec(prompt=p, max_new=0)
+    with pytest.raises(ValueError):
+        RequestSpec(prompt=p, max_new=1, priority="urgent")
+    with pytest.raises(TypeError):
+        RequestSpec(prompt=p, max_new=1, sampling="hot")
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(Exception):       # frozen dataclass
+        spec.max_new = 9
+    assert priority_rank("interactive") < priority_rank("batch")
+    with pytest.raises(ValueError):
+        priority_rank("gold")
+
+
+def test_as_spec_shim_single_warning_path():
+    p = np.arange(3, dtype=np.int32)
+    with pytest.warns(DeprecationWarning, match="RequestSpec"):
+        spec = as_spec(p, 4, eos_token=7)
+    assert spec.max_new == 4 and spec.eos_token == 7
+    # spec passthrough: no warning, and conflicting kwargs are an error
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert as_spec(spec) is spec
+    with pytest.raises(TypeError):
+        as_spec(spec, 9)
+    with pytest.raises(TypeError):
+        as_spec(p)                        # legacy form requires max_new
+
+
+def test_spec_accepted_by_scheduler_and_priority_admission():
+    sched = Scheduler(slots=1)
+    b = sched.submit(RequestSpec(prompt=[1, 2], max_new=2, priority="batch",
+                                 tenant="t1"))
+    i = sched.submit(RequestSpec(prompt=[3, 4], max_new=2,
+                                 priority="interactive",
+                                 sampling=SamplingParams(seed=99)))
+    assert [r.rid for r in sched.queue] == [i.rid, b.rid]  # class rank first
+    assert i.sample_seed == 99 and b.sample_seed == b.rid  # seed resolution
+    assert b.tenant == "t1"
+    admitted = sched.admit(lambda r: True)
+    assert [r.rid for _, r in admitted] == [i.rid]         # interactive first
+    # preempt returns the victim to the *front* of its class queue
+    i.phase = Phase.DECODE
+    i.out_tokens.append(5)
+    slot = sched.preempt(i)
+    assert slot == 0 and i.swapped and i.preemptions == 1
+    assert sched.queue[0] is i and sched.preemptions == 1
+    readmit = sched.admit(lambda r: True)
+    assert readmit[0][1] is i and i.phase is Phase.DECODE  # no re-prefill
+
+
+# ---------------------------------------------------------------------------
+# sampling head (model-level, no engine)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_tokens_greedy_rows_exact_argmax():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    seeds = jnp.arange(4, dtype=jnp.int32)
+    gen_idx = jnp.zeros(4, jnp.int32)
+    toks = M.sample_tokens(logits, seeds, gen_idx,
+                           jnp.zeros(4), jnp.zeros(4, jnp.int32), jnp.ones(4))
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.argmax(np.asarray(logits), -1))
+    # top_k=1 at any temperature is also argmax
+    toks1 = M.sample_tokens(logits, seeds, gen_idx,
+                            jnp.full(4, 2.0), jnp.ones(4, jnp.int32),
+                            jnp.ones(4))
+    np.testing.assert_array_equal(np.asarray(toks1),
+                                  np.argmax(np.asarray(logits), -1))
+
+
+def test_sample_tokens_topk_topp_mask_and_distribution():
+    """Truncation: tokens outside top-k/top-p never appear.  Distribution:
+    the empirical histogram over many (seed, idx) streams tracks softmax
+    within a small total-variation distance."""
+    rng = np.random.default_rng(1)
+    V, N = 8, 4000
+    logits_row = rng.normal(size=V).astype(np.float32)
+    logits = jnp.asarray(np.tile(logits_row, (N, 1)))
+    seeds = jnp.arange(N, dtype=jnp.int32)
+    gen_idx = jnp.zeros(N, jnp.int32)
+
+    k = 3
+    toks = np.asarray(M.sample_tokens(
+        logits, seeds, gen_idx, jnp.ones(N), jnp.full(N, k, jnp.int32),
+        jnp.ones(N)))
+    topk = set(np.argsort(logits_row)[-k:].tolist())
+    assert set(toks.tolist()) <= topk
+
+    p = 0.6
+    toks_p = np.asarray(M.sample_tokens(
+        logits, seeds, gen_idx, jnp.ones(N), jnp.zeros(N, jnp.int32),
+        jnp.full(N, p)))
+    probs = np.exp(logits_row - logits_row.max())
+    probs /= probs.sum()
+    order = np.argsort(-probs)
+    keep, mass = set(), 0.0
+    for t in order:                      # exclusive-cumsum nucleus
+        keep.add(int(t))
+        mass += probs[t]
+        if mass >= p:
+            break
+    assert set(toks_p.tolist()) <= keep
+
+    # full distribution (no truncation): TV distance to softmax
+    toks_f = np.asarray(M.sample_tokens(
+        logits, seeds, gen_idx, jnp.ones(N), jnp.zeros(N, jnp.int32),
+        jnp.ones(N)))
+    emp = np.bincount(toks_f, minlength=V) / N
+    assert 0.5 * np.abs(emp - probs).sum() < 0.05
+
+
+def test_fold_keys_batch_composition_independent():
+    """The PRNG stream is a pure function of (seed, generation index) —
+    a request's draws do not depend on who else is in the batch."""
+    one = M._fold_keys(jnp.asarray([7], jnp.int32), jnp.asarray([3], jnp.int32))
+    many = M._fold_keys(jnp.asarray([1, 7, 9], jnp.int32),
+                        jnp.asarray([0, 3, 5], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(one)[0], np.asarray(many)[1])
+
+
+# ---------------------------------------------------------------------------
+# engine: greedy identity, sampling reproducibility
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_spec_token_identical_to_legacy(warm):
+    cfg, weng = warm
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 3, 7)]
+    e1 = _engine(cfg, weng, slots=2, max_seq=32, block_size=4, seed=0)
+    for p in prompts:
+        e1.submit(RequestSpec(prompt=p, max_new=4))
+    r1 = e1.run()
+    e2 = _engine(cfg, weng, slots=2, max_seq=32, block_size=4, seed=0)
+    with pytest.warns(DeprecationWarning):
+        for p in prompts:
+            e2.submit(p, max_new=4)
+    r2 = e2.run()
+    assert sorted(r1) == sorted(r2)
+    for rid in r1:
+        np.testing.assert_array_equal(r1[rid], r2[rid])
+    assert e1.metrics.sampled_tokens == 0    # greedy batches never sample
+
+
+def test_sampling_seeded_reproducible_and_divergent(warm):
+    cfg, weng = warm
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(2)]
+
+    def run(seed):
+        eng = _engine(cfg, weng, slots=2, max_seq=32, block_size=4,
+                      sampling=True, seed=0)
+        sp = SamplingParams(temperature=0.9, top_k=24, top_p=0.95, seed=seed)
+        reqs = [eng.submit(RequestSpec(prompt=p, max_new=5, sampling=sp))
+                for p in prompts]
+        out = eng.run()
+        eng.alloc.check()
+        assert eng.metrics.sampled_tokens == sum(len(v) for v in out.values())
+        return [out[r.rid] for r in reqs]
+
+    a, b, c = run(11), run(11), run(12)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)     # bitwise-reproducible streams
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_mixed_batch_keeps_greedy_rows_identical(warm):
+    """A sampling request in the batch reroutes the whole batch through the
+    sampling step — the greedy rows must still match their solo greedy run
+    token for token."""
+    cfg, weng = warm
+    rng = np.random.default_rng(5)
+    gp = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    sp_prompt = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+
+    solo = _engine(cfg, weng, slots=2, max_seq=32, block_size=4, seed=0)
+    g = solo.submit(RequestSpec(prompt=gp, max_new=5))
+    ref = solo.run()[g.rid]
+
+    mixed = _engine(cfg, weng, slots=2, max_seq=32, block_size=4,
+                    sampling=True, seed=0)
+    g2 = mixed.submit(RequestSpec(prompt=gp, max_new=5))
+    mixed.submit(RequestSpec(
+        prompt=sp_prompt, max_new=5,
+        sampling=SamplingParams(temperature=1.0, seed=2)))
+    out = mixed.run()
+    np.testing.assert_array_equal(out[g2.rid], ref)
+    assert mixed.metrics.sampled_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# KV-swap preemption
+# ---------------------------------------------------------------------------
+
+
+def test_swap_blocks_roundtrip_unit():
+    """swap_out -> zero the pool blocks -> swap_in restores bytes exactly,
+    for float pools and int8+scales pools (grouped 5-D layout)."""
+    rng = np.random.default_rng(6)
+    nb, bs, H, D, G = 5, 4, 2, 8, 3
+    fl = kvc.PagedKVCache(
+        k=jnp.asarray(rng.normal(size=(nb, bs, H, D)).astype(np.float32)),
+        v=jnp.asarray(rng.normal(size=(nb, bs, H, D)).astype(np.float32)))
+    q = kvc.PagedKVCache(
+        k=jnp.asarray(rng.integers(-127, 128, size=(G, nb, bs, H, D))
+                      .astype(np.int8)),
+        v=jnp.asarray(rng.integers(-127, 128, size=(G, nb, bs, H, D))
+                      .astype(np.int8)),
+        k_scale=jnp.asarray(rng.uniform(0.1, 1.0, size=(G, nb, bs, H))
+                            .astype(np.float32)),
+        v_scale=jnp.asarray(rng.uniform(0.1, 1.0, size=(G, nb, bs, H))
+                            .astype(np.float32)))
+    ids = [3, 1]
+    saved = kvc.swap_out_blocks((fl, q), ids)
+    assert saved[1]["k"].dtype == np.int8          # payload keeps pool dtype
+    ix = np.asarray(ids)
+    zero = (
+        kvc.PagedKVCache(k=fl.k.at[ix].set(0), v=fl.v.at[ix].set(0)),
+        kvc.PagedKVCache(k=q.k.at[:, ix].set(0), v=q.v.at[:, ix].set(0),
+                         k_scale=q.k_scale.at[:, ix].set(0),
+                         v_scale=q.v_scale.at[:, ix].set(0)),
+    )
+    back = kvc.swap_in_blocks(zero, ids, saved)
+    np.testing.assert_array_equal(np.asarray(back[0].k), np.asarray(fl.k))
+    np.testing.assert_array_equal(np.asarray(back[0].v), np.asarray(fl.v))
+    np.testing.assert_array_equal(np.asarray(back[1].k), np.asarray(q.k))
+    np.testing.assert_array_equal(np.asarray(back[1].k_scale),
+                                  np.asarray(q.k_scale))
+    with pytest.raises(TypeError):
+        kvc.swap_out_blocks((object(),), ids)
+
+
+def test_preemption_swap_restore_round_trip(warm):
+    """An interactive arrival preempts the decoding batch request; the
+    victim's stream after restore is token-identical to an undisturbed run,
+    and the allocator invariant holds after every tick."""
+    cfg, weng = warm
+    rng = np.random.default_rng(7)
+    batch_p = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    inter_p = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+
+    eng = _engine(cfg, weng, slots=1, max_seq=64, block_size=4,
+                  num_blocks=12, preempt=True, seed=0)
+    b = eng.submit(RequestSpec(prompt=batch_p, max_new=10, priority="batch"))
+    for _ in range(6):                    # let the batch request decode a bit
+        eng.tick()
+        eng.alloc.check()
+    i = eng.submit(RequestSpec(prompt=inter_p, max_new=3,
+                               priority="interactive"))
+    while eng.tick():
+        eng.alloc.check()
+    out = eng.results
+    eng.alloc.check()
+    assert eng.metrics.preemptions >= 1
+    assert eng.metrics.swap_out_blocks == eng.metrics.swap_in_blocks > 0
+    assert eng.scheduler.preemptions >= 1
+    assert len(out[i.rid]) == 3
+    for m in eng.metrics.requests:
+        if m.rid == b.rid:
+            assert m.preemptions >= 1 and m.priority == "batch"
+
+    base = _engine(cfg, weng, slots=1, max_seq=64, block_size=4,
+                   num_blocks=12, seed=0)
+    bb = base.submit(RequestSpec(prompt=batch_p, max_new=10, priority="batch"))
+    ref = base.run()
+    np.testing.assert_array_equal(out[b.rid], ref[bb.rid])
+
+
+def test_preempt_refused_on_recurrent_stack():
+    cfg = configs.get_smoke("xlstm-1.3b")
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(cfg, slots=1, max_seq=32, preempt=True)
+
+
+# ---------------------------------------------------------------------------
+# router: class-aware shedding, tenant fairness, eos through the cluster
+# ---------------------------------------------------------------------------
+
+
+class _StubPool:
+    """Router target for admission-only tests (nothing is dispatched)."""
+
+    def views(self):
+        return []
+
+    def submit_to(self, idx, h):
+        raise AssertionError("admission tests must not dispatch")
+
+    def stop(self):
+        pass
+
+
+def _spec(rng, vocab, **kw):
+    return RequestSpec(prompt=rng.integers(0, vocab, size=4).astype(np.int32),
+                       max_new=2, **kw)
+
+
+def test_router_class_aware_shed_and_tenant_fairness():
+    from repro.cluster.router import Router
+
+    rng = np.random.default_rng(9)
+    # batch window shrinks to 2 of 4; tenant share caps any tenant at 2
+    r = Router(_StubPool(), max_pending=4, batch_pending_frac=0.5,
+               tenant_share=0.5, async_dispatch=False)
+    assert r.submit(_spec(rng, 64, priority="batch", tenant="a")) is not None
+    assert r.submit(_spec(rng, 64, priority="batch", tenant="b")) is not None
+    # batch window (2) is full -> batch sheds, interactive still admits
+    assert r.submit(_spec(rng, 64, priority="batch", tenant="c")) is None
+    assert r.shed_by_class["batch"] == 1
+    assert r.submit(_spec(rng, 64, priority="interactive",
+                          tenant="c")) is not None
+    # tenant "a" hits its share cap (2) before the global window (4)
+    assert r.submit(_spec(rng, 64, priority="interactive",
+                          tenant="a")) is not None
+    assert r.submit(_spec(rng, 64, priority="interactive", tenant="a")) is None
+    stats = r.tenant_stats()
+    assert stats["a"] == {"offered": 3, "admitted": 2, "shed": 1,
+                          "in_flight": 2}
+    assert r.shed_by_class["interactive"] == 1 and r.shed == 2
+    # dispatch order: interactive queue drains before batch
+    order = []
+    while True:
+        h = r._next_locked()
+        if h is None:
+            break
+        order.append(h.spec.priority)
+    assert order == sorted(order, key=priority_rank)
+
+
+@pytest.fixture(scope="module")
+def pool(warm):
+    cfg, weng = warm
+    from repro import cluster
+
+    p = cluster.ReplicaPool(cfg, 1, slots=2, max_seq=32, block_size=4)
+    p.replicas[0].engine.share_steps_from(weng)
+    p.warmup()
+    yield cfg, p
+    p.stop()
+
+
+def test_eos_token_reaches_replicas(pool):
+    """ClusterRequest carries the full spec, so eos_token now survives the
+    router -> replica hop (it could not before this API)."""
+    cfg, p = pool
+    from repro import cluster
+
+    router = cluster.Router(p, async_dispatch=False)
+    rng = np.random.default_rng(10)
+    prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    h = router.submit(RequestSpec(prompt=prompt, max_new=4))
+    router.dispatch_sync()
+    p.run_sync()
+    first = int(h.result(timeout=30)[0])
+    h2 = router.submit(RequestSpec(prompt=prompt, max_new=4, eos_token=first))
+    router.dispatch_sync()
+    p.run_sync()
+    toks = h2.result(timeout=30)
+    assert toks.tolist() == [first]
+    assert h2.spec.eos_token == first and h2.max_new == 4
+
+
+def test_replay_builds_specs_with_labels():
+    from repro import cluster
+
+    tr = cluster.mixed_traffic(64, n=6, seed=2,
+                               class_mix=(("interactive", 0.5),
+                                          ("batch", 0.5)),
+                               tenants=2)
+    plain = cluster.mixed_traffic(64, n=6, seed=2)
+    # labelling draws from its own stream: prompts/budgets are untouched
+    assert [i.prompt for i in tr.items] == [i.prompt for i in plain.items]
+    assert [i.max_new for i in tr.items] == [i.max_new for i in plain.items]
+    assert {i.tenant for i in tr.items} <= {"t0", "t1"}
+    seen = []
+    sp = SamplingParams(temperature=0.7, seed=1)
+    cluster.replay(tr, seen.append, sampling=sp)
+    assert all(isinstance(s, RequestSpec) for s in seen)
+    assert [s.priority for s in seen] == [i.priority for i in tr.items]
+    assert [s.tenant for s in seen] == [i.tenant for i in tr.items]
+    assert all(s.sampling == sp for s in seen)
+
+
+def test_trace_roundtrip_preserves_labels(tmp_path):
+    from repro import cluster
+
+    tr = cluster.mixed_traffic(64, n=4, seed=3,
+                               class_mix=(("batch", 1.0),), tenants=3)
+    path = str(tmp_path / "trace.json")
+    tr.save(path)
+    back = cluster.Trace.load(path)
+    assert back.items == tr.items
+    assert all(i.priority == "batch" for i in back.items)
+
+
+def test_preempt_never_evicts_same_or_higher_class(warm):
+    """A batch arrival must not preempt a decoding interactive request (nor
+    another batch request — preemption is strictly cross-class)."""
+    cfg, weng = warm
+    rng = np.random.default_rng(8)
+    eng = _engine(cfg, weng, slots=1, max_seq=64, block_size=4,
+                  num_blocks=12, preempt=True, seed=0)
+    a = eng.submit(RequestSpec(
+        prompt=rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+        max_new=6, priority="interactive"))
+    for _ in range(4):
+        eng.tick()
+    eng.submit(RequestSpec(
+        prompt=rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+        max_new=2, priority="batch"))
+    eng.run()
+    eng.alloc.check()
+    assert eng.metrics.preemptions == 0
+    assert a.preemptions == 0

@@ -311,13 +311,17 @@ def test_record_breaches_only_on_transition(tmp_path):
     assert report.state == BREACH and rec.record_breaches(report) == []
 
 
-def _fake_engine(free, in_use, drafted=0, accepted=0):
+def _fake_engine(free, in_use, drafted=0, accepted=0,
+                 preemptions=0, admitted=0):
     alloc = types.SimpleNamespace(stats=lambda: {
         "in_use": in_use, "reserved": 0, "free": free})
     metrics = types.SimpleNamespace(
         spec_draft_tokens=drafted, spec_accepted_tokens=accepted,
-        acceptance_rate=accepted / max(1, drafted))
-    return types.SimpleNamespace(alloc=alloc, metrics=metrics)
+        acceptance_rate=accepted / max(1, drafted),
+        preemptions=preemptions)
+    sched = types.SimpleNamespace(admitted_total=admitted)
+    return types.SimpleNamespace(alloc=alloc, metrics=metrics,
+                                 scheduler=sched)
 
 
 def test_check_engine_pressure_triggers(tmp_path):
@@ -333,6 +337,16 @@ def test_check_engine_pressure_triggers(tmp_path):
     # below min_drafted: too little evidence to call a collapse
     assert rec.check_engine(
         _fake_engine(free=50, in_use=50, drafted=10, accepted=0)) == []
+    # preemption pressure: victims swapped for over half of admissions
+    paths = rec.check_engine(
+        _fake_engine(free=50, in_use=50, preemptions=6, admitted=8))
+    assert len(paths) == 1 and "preemption-pressure" in paths[0]
+    with open(paths[0]) as f:
+        ctx = json.load(f)["trigger"]["context"]
+    assert ctx["preemptions"] == 6 and ctx["admitted_total"] == 8
+    # same ratio under the threshold: no bundle
+    assert rec.check_engine(
+        _fake_engine(free=50, in_use=50, preemptions=2, admitted=8)) == []
 
 
 # ---------------------------------------------------------------------------
